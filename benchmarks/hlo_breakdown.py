@@ -1,0 +1,51 @@
+"""Analysis tool: per-computation collective/FLOP breakdown of a dry-run HLO.
+
+The §Perf workflow's "profiler": shows where collective bytes live (which
+loop, which op type, what multiplicity) so each hillclimb iteration can form
+a quantitative hypothesis before changing anything.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.hlo_breakdown results/dryrun/<cell>.hlo.txt
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.analysis.hlo_parse import (
+    _comp_cost,
+    _split_computations,
+    _trip_count,
+    parse_hlo_costs,
+)
+
+
+def breakdown(path: str) -> None:
+    hlo = open(path).read()
+    comps = _split_computations(hlo)
+    costs = {n: _comp_cost(b) for n, b in comps.items()}
+    total = parse_hlo_costs(hlo)
+
+    print(f"== {path}")
+    print(f"total (loop-corrected): dot_flops/dev={total['dot_flops']:.3e} "
+          f"coll_bytes/dev={total['coll_bytes']:.3e}")
+    for op, b in sorted(total["coll_by_op"].items(), key=lambda kv: -kv[1]):
+        if b:
+            print(f"  {op:20s} {b:.3e} B")
+    print("-- computations (own cost x 1, loops shown with trips):")
+    rows = []
+    for n, c in costs.items():
+        coll = sum(c.coll_by_op.values())
+        if coll > 0 or c.dot_flops > 0 or c.whiles:
+            rows.append((coll, n, c))
+    for coll, n, c in sorted(rows, reverse=True)[:25]:
+        loops = ", ".join(
+            f"x{_trip_count(comps.get(cond, ''))}->{body[:40]}"
+            for cond, body in c.whiles
+        )
+        print(f"  {n[:58]:58s} coll={coll:9.3e} flops={c.dot_flops:9.3e} {loops}")
+
+
+if __name__ == "__main__":
+    for p in sys.argv[1:]:
+        breakdown(p)

@@ -1,0 +1,67 @@
+"""Kernel microbenchmarks: interpret-mode vs XLA-oracle wall time.
+
+Interpret-mode timings are NOT TPU performance (the kernel body runs on the
+CPU interpreter); they exist to (a) pin a regression baseline for the kernel
+code path and (b) compare against the jnp oracle at matched shapes.  Real
+TPU numbers come from the same entry points with backend='pallas'.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops
+
+
+def bench_kernels() -> None:
+    rng = np.random.default_rng(0)
+
+    # flic_lookup: serving-shard geometry
+    s, w, d, q = 128, 4, 16, 256
+    tags = rng.integers(0, 2**31 - 1, (s, w)).astype(np.int32)
+    ts = rng.integers(0, 10_000, (s, w)).astype(np.int32)
+    valid = (rng.random((s, w)) < 0.8)
+    data = rng.standard_normal((s, w, d)).astype(np.float32)
+    keys = tags[rng.integers(0, s, q), rng.integers(0, w, q)].astype(np.int32)
+    sidx = (keys.astype(np.int64) % s).astype(np.int32)
+    for backend in ("interpret", "xla"):
+        us = time_fn(lambda: ops.flic_lookup(tags, ts, valid, data, keys, sidx, backend=backend))
+        emit(f"kern.flic_lookup.{backend}", us, f"q={q};cache={s}x{w}")
+
+    # paged_attention: decode geometry (per layer slice)
+    b, hkv, g, dh, page, pt, mp = 4, 8, 4, 128, 16, 64, 8
+    qv = jnp.asarray(rng.standard_normal((b, hkv, g, dh)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((pt, page, hkv, dh)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((pt, page, hkv, dh)), jnp.float32)
+    table = rng.integers(0, pt, (b, mp)).astype(np.int32)
+    lengths = rng.integers(page, mp * page, (b,)).astype(np.int32)
+    for backend in ("interpret", "xla"):
+        us = time_fn(lambda: ops.paged_attention(qv, kp, vp, table, lengths, backend=backend))
+        emit(f"kern.paged_attention.{backend}", us, f"b={b};pages={mp};page={page}")
+
+    # ssd_scan: mamba2-370m geometry
+    b2, c, h, p, n = 2, 16, 32, 64, 128
+    st = rng.standard_normal((b2, c, h, p, n)).astype(np.float32)
+    dec = rng.random((b2, c, h)).astype(np.float32)
+    for backend in ("interpret", "xla"):
+        us = time_fn(lambda: ops.ssd_scan(st, dec, None, backend=backend))
+        emit(f"kern.ssd_scan.{backend}", us, f"chunks={c};heads={h}")
+
+    # flic_merge: shard reconciliation
+    s2 = 512
+    a = (
+        rng.integers(0, 2**31 - 1, (s2, w)).astype(np.int32),
+        rng.integers(0, 10_000, (s2, w)).astype(np.int32),
+        rng.random((s2, w)) < 0.7,
+        rng.standard_normal((s2, w, d)).astype(np.float32),
+    )
+    bb = (
+        rng.integers(0, 2**31 - 1, (s2, w)).astype(np.int32),
+        rng.integers(0, 10_000, (s2, w)).astype(np.int32),
+        rng.random((s2, w)) < 0.7,
+        rng.standard_normal((s2, w, d)).astype(np.float32),
+    )
+    for backend in ("interpret", "xla"):
+        us = time_fn(lambda: ops.flic_merge(*a, *bb, backend=backend))
+        emit(f"kern.flic_merge.{backend}", us, f"lines={s2 * w}")

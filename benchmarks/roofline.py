@@ -1,0 +1,58 @@
+"""Roofline table: derive the three terms for every dry-run cell.
+
+Reads ``results/dryrun/<cell>.json`` + ``<cell>.hlo.txt`` (written by
+``repro.launch.dryrun``), applies the loop-corrected HLO parse, and emits the
+per-cell rows consumed by EXPERIMENTS.md §Roofline.  Single-pod cells only,
+per the assignment (multi-pod proves sharding, not the roofline).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.analysis.hlo_parse import parse_hlo_costs
+from repro.analysis.roofline import roofline_row
+from repro.config import SHAPES, get_arch
+
+
+def build_table(dryrun_dir: str = "results/dryrun", pod: str = "pod1") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, f"*.{pod}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        hlo_path = path.replace(".json", ".hlo.txt")
+        if not os.path.exists(hlo_path):
+            continue
+        with open(hlo_path) as f:
+            costs = parse_hlo_costs(f.read())
+        cfg = get_arch(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        row = roofline_row(
+            cfg, shape, rec["n_devices"], costs,
+            cell=rec["cell"],
+        ).as_dict()
+        row["coll_by_op"] = costs["coll_by_op"]
+        rows.append(row)
+    return rows
+
+
+def emit_table(dryrun_dir: str = "results/dryrun") -> list[dict]:
+    rows = build_table(dryrun_dir)
+    for r in rows:
+        dom_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(
+            f"roofline.{r['cell']}",
+            dom_s * 1e6,
+            f"dom={r['dominant']};comp_s={r['compute_s']:.2e};"
+            f"mem_s={r['memory_s']:.2e};coll_s={r['collective_s']:.2e};"
+            f"useful={r['useful_ratio']:.2f}",
+        )
+    if rows:
+        out = os.path.join(dryrun_dir, "..", "roofline_table.json")
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows

@@ -1,0 +1,37 @@
+"""Benchmark harness entry point.
+
+Emits ``name,us_per_call,derived`` CSV — one section per paper table/figure
+(Figs. 2-5 + abstract claims + §II-B bound), kernel microbenchmarks, and the
+roofline table when dry-run artifacts are present.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.run [--quick]``
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    scale = 0.25 if quick else 1.0
+
+    from benchmarks import figs
+    print("name,us_per_call,derived")
+    figs.headline(ticks=int(1200 * scale))
+    figs.fig2_latency(ticks=int(400 * scale))
+    figs.fig3_bandwidth(ticks=int(600 * scale))
+    figs.fig4_miss_ratio(ticks=int(800 * scale))
+    figs.fig5_txn_size(ticks=int(600 * scale))
+    figs.coherence_bound()
+
+    from benchmarks.kernels_bench import bench_kernels
+    bench_kernels()
+
+    from benchmarks.roofline import emit_table
+    rows = emit_table()
+    if not rows:
+        print("roofline.skipped,0.0,run `python -m repro.launch.dryrun --all` first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""End-to-end driver: a city-scale fog deployment, the paper's own scenario.
+
+Run: ``PYTHONPATH=src python examples/cityscale_cache_sim.py [--nodes 100]``
+
+Simulates a metropolitan sensor fleet (default 100 nodes, ~30 simulated
+minutes): every node logs one reading per second, shares it with the fog
+under a bursty (Gilbert-Elliott) radio channel, and the single queued writer
+trickles durable rows to the cloud under API rate limits — including a
+3-minute cloud outage in the middle, which FLIC rides out (paper §VI).
+Prints the paper's evaluation metrics plus a tick-by-tick outage trace.
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.core import SimConfig, summarize
+from repro.core import backing_store as bs
+from repro.core.simulator import init_sim, sim_tick
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=100)
+    ap.add_argument("--minutes", type=int, default=30)
+    ap.add_argument("--cache-lines", type=int, default=200)
+    ap.add_argument("--outage-at", type=int, default=900)
+    ap.add_argument("--outage-s", type=int, default=180)
+    args = ap.parse_args()
+
+    cfg = SimConfig(
+        n_nodes=args.nodes,
+        cache_lines=args.cache_lines,
+        loss_model="gilbert_elliott",
+        queue_capacity=65536,
+        writer_max_per_tick=256,
+    )
+    ticks = args.minutes * 60
+    state = init_sim(cfg)
+    step = jax.jit(lambda s: sim_tick(cfg, s))
+
+    series = []
+    for t in range(ticks):
+        if t == args.outage_at:
+            state = dataclasses.replace(
+                state, store=bs.inject_outage(state.store, t, args.outage_s)
+            )
+            print(f"[t={t:5d}] *** cloud outage injected ({args.outage_s}s) ***")
+        state, m = step(state)
+        series.append(m)
+        if t % 300 == 0 or (args.outage_at <= t < args.outage_at + args.outage_s + 60
+                            and t % 60 == 0):
+            print(
+                f"[t={t:5d}] queue={int(m.queue_depth):6d} "
+                f"missed_reads={int(m.misses):3d} "
+                f"wan_B/s={float(m.wan_tx_bytes + m.wan_rx_bytes):12.0f}"
+            )
+
+    stacked = jax.tree.map(lambda *xs: jax.numpy.stack(xs), *series)
+    s = summarize(stacked)
+    print("\n=== 30-minute city-scale run ===")
+    for k in ("read_miss_ratio", "sync_store_request_ratio",
+              "wan_reduction_vs_baseline", "wan_bytes_per_tick",
+              "lan_bytes_per_tick", "writes_gen", "writes_drained",
+              "final_queue_depth", "queue_dropped", "store_missing"):
+        print(f"{k:30s} {s[k]}")
+    assert s["writes_drained"] + s["final_queue_depth"] == s["writes_gen"], \
+        "write-behind conservation violated"
+    print("\nFLIC rode out the outage: reads stayed fog-served, the queue "
+          "absorbed writes, and the writer drained the backlog after recovery.")
+
+
+if __name__ == "__main__":
+    main()

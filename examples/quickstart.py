@@ -1,0 +1,67 @@
+"""Quickstart: the FLIC cache in five minutes.
+
+Run: ``PYTHONPATH=src python examples/quickstart.py``
+
+Walks the paper's core mechanics with the public API:
+  1. a single node's set-associative cache (insert / lookup / LRU-evict);
+  2. soft coherence — a lossy broadcast round across a small fog, resolved
+     by max-timestamp;
+  3. the full simulated fog reproducing the paper's headline numbers.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    CacheLine,
+    SimConfig,
+    empty_cache,
+    fog_lookup,
+    insert,
+    local_lookup,
+    merge_broadcasts,
+    run_sim,
+    summarize,
+)
+
+
+def main() -> None:
+    # --- 1. one node's cache -------------------------------------------------
+    cache = empty_cache(sets=16, ways=4, payload_dim=4)
+    line = CacheLine(
+        key=jnp.uint32(0xBEEF), data_ts=jnp.int32(10), origin=jnp.int32(0),
+        data=jnp.arange(4, dtype=jnp.float32), valid=jnp.asarray(True),
+        dirty=jnp.asarray(False),
+    )
+    cache, _ = insert(cache, line, now=10)
+    cache, hit = local_lookup(cache, jnp.uint32(0xBEEF), now=11)
+    print(f"1) local cache: hit={bool(hit.hit)} ts={int(hit.data_ts)} data={hit.data}")
+
+    # --- 2. soft coherence over a lossy broadcast ----------------------------
+    fog = empty_cache(16, 4, 4, batch=(3,))           # 3 nodes
+    rows = CacheLine(
+        key=jnp.full((1,), 0xBEEF, jnp.uint32),
+        data_ts=jnp.asarray([42], jnp.int32),          # a NEWER version
+        origin=jnp.asarray([1], jnp.int32),
+        data=jnp.full((1, 4), 7.0, jnp.float32),
+        valid=jnp.asarray([True]),
+        dirty=jnp.asarray([False]),
+    )
+    delivered = jnp.asarray([[False], [True], [True]])  # node 0 misses it
+    fog, _ = merge_broadcasts(fog, rows, delivered, now=42)
+    fog, best, responders = fog_lookup(fog, jnp.uint32(0xBEEF), now=43)
+    print(f"2) fog read: newest ts={int(best.data_ts)} "
+          f"responders={responders.tolist()} (node 0 lost the packet — "
+          f"soft coherence still serves the newest copy)")
+
+    # --- 3. the paper's evaluation, end to end --------------------------------
+    cfg = SimConfig(n_nodes=50, cache_lines=200, loss_prob=0.01)
+    _, series = run_sim(cfg, 600, seed=0)
+    s = summarize(series)
+    print("3) city-scale sim (50 nodes, 200-line caches, lossy LAN):")
+    print(f"   read miss ratio          {s['read_miss_ratio']:.3%}   (paper: <2%)")
+    print(f"   sync store requests      {s['sync_store_request_ratio']:.3%}   (paper: ~5%)")
+    print(f"   WAN bytes vs no-cache    -{s['wan_reduction_vs_baseline']:.1%}   (paper: >50%)")
+
+
+if __name__ == "__main__":
+    main()

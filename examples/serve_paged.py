@@ -1,0 +1,52 @@
+"""Serve a model with batched requests through the FLIC-paged KV cache.
+
+Run: ``PYTHONPATH=src python examples/serve_paged.py``
+
+Shows the paper's cache doing production work: continuous batching, paged
+decode attention (the Pallas kernel's algorithm), LRU page eviction with
+write-behind spill to the host store, and content-addressed prefix reuse —
+a resubmitted prompt skips prefill exactly like a fog read hit.
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.config import get_smoke_arch
+from repro.models import init_model
+from repro.serving import ServeEngine
+
+
+def main() -> None:
+    cfg = get_smoke_arch("phi3_medium_14b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_batch=4, max_seq=96, page_size=8,
+                      num_pages=48)
+
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab_size, 16)) for _ in range(4)]
+
+    # wave 1: four unique prompts
+    for p in prompts:
+        eng.submit(p, max_new=12)
+    t0 = time.perf_counter()
+    done1 = eng.run()
+    w1 = time.perf_counter() - t0
+
+    # wave 2: the same prompts — FLIC prefix reuse should skip prefill
+    for p in prompts:
+        eng.submit(p, max_new=12)
+    t0 = time.perf_counter()
+    done2 = eng.run()
+    w2 = time.perf_counter() - t0
+
+    print(f"wave 1: {len(done1)} requests, {sum(len(r.tokens) for r in done1)} tokens, {w1:.2f}s")
+    print(f"wave 2: {len(done2)} requests, {sum(len(r.tokens) for r in done2)} tokens, {w2:.2f}s"
+          f"  (prefill reused: {sum(r.reused_prefill for r in done2)}/4)")
+    same = all(a.tokens == b.tokens for a, b in zip(done1, done2))
+    print(f"outputs identical across waves: {same}")
+    print("FLIC page-manager stats:", eng.mgr.stats)
+
+
+if __name__ == "__main__":
+    main()

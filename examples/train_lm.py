@@ -1,0 +1,64 @@
+"""Train a language model end to end with the full production stack.
+
+Run: ``PYTHONPATH=src python examples/train_lm.py [--steps 200] [--big]``
+
+Default: a ~10M-param granite-family model for 200 steps on CPU — the whole
+path (FLIC-cached data pipeline -> microbatched train step -> AdamW ->
+async checkpoints -> fault injection at step 120 with automatic recovery)
+is the same code the pod launcher runs.  ``--big`` switches to a ~100M-param
+config (slow on 1 CPU core; the path is identical).
+"""
+import argparse
+import dataclasses
+
+from repro.config import ModelConfig
+from repro.train import Trainer, TrainerConfig, TrainHyper
+from repro.train.trainer import inject_fault_at
+
+
+SMALL = ModelConfig(                      # ~10M params
+    name="train-demo-10m", family="dense",
+    num_layers=4, d_model=256, num_heads=8, num_kv_heads=4, head_dim=32,
+    d_ff=1024, vocab_size=8192,
+)
+BIG = ModelConfig(                        # ~100M params
+    name="train-demo-100m", family="dense",
+    num_layers=12, d_model=768, num_heads=12, num_kv_heads=4, head_dim=64,
+    d_ff=3072, vocab_size=32768,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--big", action="store_true")
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--fault-at", type=int, default=120)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = BIG if args.big else SMALL
+    tcfg = TrainerConfig(
+        steps=args.steps, seq_len=args.seq, global_batch=args.batch,
+        ckpt_dir=args.ckpt_dir, ckpt_every=40,
+        hyper=TrainHyper(peak_lr=1e-3, warmup_steps=20, total_steps=args.steps,
+                         microbatches=2),
+    )
+    hook = inject_fault_at({args.fault_at}) if 0 < args.fault_at < args.steps else None
+    trainer = Trainer(cfg, tcfg, fault_hook=hook)
+    hist = trainer.run()
+
+    print(f"\n{cfg.name}: {len(hist)} steps")
+    for h in hist[:: max(len(hist) // 10, 1)]:
+        print(f"  step {h['step']:4d}  loss {h['loss']:.4f}  "
+              f"lr {h['lr']:.2e}  {h['step_time_s']*1e3:7.1f} ms")
+    first = sum(h["loss"] for h in hist[:5]) / 5
+    last = sum(h["loss"] for h in hist[-5:]) / 5
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'}); "
+          f"survived injected fault at step {args.fault_at} via ckpt restart")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Roofline analysis: loop-corrected HLO parsing + analytical cost models."""
+from repro.analysis.hlo_parse import parse_hlo_costs
+from repro.analysis.roofline import HW, roofline_row, model_flops
+
+__all__ = ["parse_hlo_costs", "HW", "roofline_row", "model_flops"]

@@ -1,0 +1,176 @@
+"""Loop-corrected cost extraction from partitioned HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop BODY ONCE — for a
+scan-over-layers model that under-reports FLOPs and collective bytes by the
+layer count (verified empirically in EXPERIMENTS.md §Dry-run).  This module
+re-derives both from the HLO text with loop multiplicity:
+
+  1. segment the module into named computations;
+  2. per computation, sum (a) ``dot`` FLOPs (2 * result_elems * contracted
+     size, from the operand shapes + ``lhs_contracting_dims``) and
+     (b) collective result-buffer bytes;
+  3. find ``while`` ops, resolve their body/condition computations, estimate
+     the trip count as the largest integer constant in the condition
+     computation (scan bounds appear there; heuristic, documented);
+  4. fold costs bottom-up from ENTRY with trip multipliers.
+
+All quantities are PER DEVICE (the HLO is the post-SPMD per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+_SHAPE = r"(?:pred|bf16|f16|f32|f64|s4|s8|s16|s32|s64|u4|u8|u16|u32|u64|c64|c128)\[[0-9,]*\]"
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s4|s8|s16|s32|s64|u4|u8|u16|u32|u64|c64|c128)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->", re.M)
+_WHILE_RE = re.compile(r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DEF_RE = re.compile(r"^%?([\w.\-]+)\s*=\s*(\(?)(" + _SHAPE + r")")
+_DOT_LINE_RE = re.compile(
+    r"=\s*(" + _SHAPE + r")[^=]*?\bdot\(\s*%?([\w.\-]+)"
+)
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _shape_info(text: str) -> tuple[int, int]:
+    """(elements, bytes) summed over every shape literal in ``text``."""
+    elems = total = 0
+    for m in _SHAPE_RE.finditer(text):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return elems, total
+
+
+def _dims(shape_lit: str) -> list[int]:
+    m = _SHAPE_RE.match(shape_lit)
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class CompCost:
+    dot_flops: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    whiles: list = dataclasses.field(default_factory=list)  # (cond, body)
+
+
+def _split_computations(hlo: str) -> dict[str, str]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m and ("{" in line):
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return {k: "\n".join(v) for k, v in comps.items()}
+
+
+def _comp_cost(body: str) -> CompCost:
+    c = CompCost(coll_by_op={k: 0.0 for k in _COLL_OPS},
+                 coll_counts={k: 0 for k in _COLL_OPS})
+    # symbol table: instruction name -> first shape literal of its result
+    # (operands of dot are printed without types on the CPU backend)
+    shapes: dict[str, str] = {}
+    for line in body.splitlines():
+        s = line.strip()
+        dm = _DEF_RE.match(s)
+        if dm:
+            shapes[dm.group(1)] = dm.group(3)
+    for line in body.splitlines():
+        s = line.strip()
+        if " dot(" in s:
+            dm = _DOT_LINE_RE.search(s)
+            if dm:
+                res, lhs_name = dm.group(1), dm.group(2)
+                res_elems, _ = _shape_info(res)
+                cm = _CONTRACT_RE.search(s)
+                contracted = 1
+                lhs_shape = shapes.get(lhs_name)
+                if cm and cm.group(1) and lhs_shape:
+                    ld = _dims(lhs_shape)
+                    for idx in cm.group(1).split(","):
+                        if int(idx) < len(ld):
+                            contracted *= ld[int(idx)]
+                c.dot_flops += 2.0 * res_elems * contracted
+        for op in _COLL_OPS:
+            if f" {op}(" in s or f" {op}-start(" in s:
+                head = s.split("=", 1)[1].split(op)[0] if "=" in s else s.split(op)[0]
+                _, b = _shape_info(head)
+                c.coll_by_op[op] += b
+                c.coll_counts[op] += 1
+                break
+        wm = _WHILE_RE.search(s)
+        if wm:
+            c.whiles.append((wm.group(1), wm.group(2)))
+    return c
+
+
+def _trip_count(cond_body: str) -> int:
+    consts = [int(x) for x in _CONST_RE.findall(cond_body)]
+    consts = [x for x in consts if x > 1]
+    return max(consts) if consts else 1
+
+
+def parse_hlo_costs(hlo: str) -> dict:
+    """Loop-corrected per-device costs. Returns
+    {dot_flops, coll_bytes, coll_by_op, trip_counts:{body:trips}}."""
+    comps = _split_computations(hlo)
+    costs = {name: _comp_cost(body) for name, body in comps.items()}
+    trip_counts: dict[str, int] = {}
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def fold(name: str) -> tuple[float, float, tuple]:
+        c = costs.get(name)
+        if c is None:
+            return 0.0, 0.0, tuple()
+        flops = c.dot_flops
+        coll = sum(c.coll_by_op.values())
+        by_op = dict(c.coll_by_op)
+        for cond, bodyn in c.whiles:
+            trips = _trip_count(comps.get(cond, ""))
+            trip_counts[bodyn] = trips
+            f2, b2, byop2 = fold(bodyn)
+            flops += trips * f2
+            coll += trips * b2
+            for k, v in dict(byop2).items():
+                by_op[k] = by_op.get(k, 0.0) + trips * v
+        return flops, coll, tuple(sorted(by_op.items()))
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:  # fall back: the computation with the most whiles
+        entry = max(costs, key=lambda k: len(costs[k].whiles)) if costs else ""
+
+    flops, coll, by_op = fold(entry)
+    return {
+        "dot_flops": flops,
+        "coll_bytes": coll,
+        "coll_by_op": dict(by_op),
+        "trip_counts": trip_counts,
+        "entry": entry,
+    }

@@ -1,0 +1,4 @@
+"""Checkpointing: sharded npz save/restore with manifest + async writer."""
+from repro.ckpt.checkpoint import CheckpointManager, restore_checkpoint, save_checkpoint
+
+__all__ = ["CheckpointManager", "restore_checkpoint", "save_checkpoint"]

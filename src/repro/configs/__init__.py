@@ -1,0 +1,9 @@
+"""One module per assigned architecture (+ the paper's own sim config).
+
+Each module exports ``CONFIG`` (the exact published full-size config, used
+only via AOT dry-run) and ``SMOKE_CONFIG`` (a reduced same-family config that
+runs a real forward/train step on CPU in the test suite).
+"""
+from repro.config import ARCH_IDS, get_arch, get_smoke_arch
+
+__all__ = ["ARCH_IDS", "get_arch", "get_smoke_arch"]

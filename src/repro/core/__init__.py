@@ -1,0 +1,49 @@
+"""FLIC core: the paper's primary contribution in JAX.
+
+A distributed, loss-tolerant ("soft coherent") fog cache between application
+code and a slow cloud backing store:
+
+* ``cache_state`` / ``flic`` — functional set-associative cache with LRU
+  eviction and timestamp-resolved (soft-coherence) upserts;
+* ``coherence`` — loss models, broadcast merge, and the paper's §II-B bound;
+* ``writeback`` — the single queued writer (ring buffer + binary exponential
+  backoff + API token bucket);
+* ``backing_store`` — simulated cloud store (Google-Sheets-like full-table
+  reads, rate caps, failure windows / a well-behaved "db" profile);
+* ``simulator`` — the paper's Docker fog testbed as one vectorized
+  ``lax.scan`` program;
+* ``distributed`` — the pod-scale embodiment under ``shard_map``.
+"""
+from repro.core.cache_state import CacheLine, CacheState, empty_cache, null_line
+from repro.core.flic import LookupResult, fog_lookup, insert, insert_batch, local_lookup
+from repro.core.coherence import (
+    bernoulli_loss_mask,
+    exact_total_loss_prob,
+    markov_loss_bound,
+    merge_broadcasts,
+)
+from repro.core.metrics import TickMetrics, summarize
+from repro.core.simulator import SimConfig, SimState, init_sim, run_sim, sim_tick
+
+__all__ = [
+    "CacheLine",
+    "CacheState",
+    "empty_cache",
+    "null_line",
+    "LookupResult",
+    "fog_lookup",
+    "insert",
+    "insert_batch",
+    "local_lookup",
+    "bernoulli_loss_mask",
+    "exact_total_loss_prob",
+    "markov_loss_bound",
+    "merge_broadcasts",
+    "TickMetrics",
+    "summarize",
+    "SimConfig",
+    "SimState",
+    "init_sim",
+    "run_sim",
+    "sim_tick",
+]

@@ -1,0 +1,124 @@
+"""Simulated cloud backing store (paper §II-D).
+
+Two semantic profiles:
+
+* ``sheets`` — reproduces the Google-Sheets pathologies the paper leans on:
+  - **reads return the entire table** (no predicate pushdown): read bytes =
+    rows_in_store * row_bytes, and they grow as the table fills (drives the
+    paper's Fig. 5 transaction-size trend);
+  - hard API rate limit (500 calls / 100 s) enforced by the writer's token
+    bucket;
+  - contemporaneous writes can overwrite each other (non-transactional) —
+    modelled by a collision probability when >1 write lands in one tick.
+* ``db`` — a well-behaved row-granular transactional store (the ablation the
+  paper wished for): read bytes = row_bytes.
+
+Store *contents* are represented analytically: the single FIFO writer drains
+rows in enqueue order, so the store holds exactly the first ``drained_total``
+enqueued rows.  Membership of a (tick, node) datum is then an integer
+comparison against its enqueue index — exact, with static shapes.
+
+Failures: a deterministic outage schedule (for tests) plus an optional
+PRNG-driven outage chain (for robustness runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StoreState:
+    drained_total: jax.Array   # int32 — rows durably in the store
+    api_calls: jax.Array       # int32 — cumulative API calls (reads+writes)
+    read_bytes: jax.Array      # int64-ish float32 accumulators kept in sim metrics
+    outage_until: jax.Array    # int32 — store is down while now < outage_until
+    lost_writes: jax.Array     # int32 — rows clobbered by write collisions
+
+
+def init_store() -> StoreState:
+    return StoreState(
+        drained_total=jnp.int32(0),
+        api_calls=jnp.int32(0),
+        read_bytes=jnp.float32(0.0),
+        outage_until=jnp.int32(0),
+        lost_writes=jnp.int32(0),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreProfile:
+    """Static (non-traced) semantics of the backing store."""
+
+    kind: Literal["sheets", "db"] = "sheets"
+    row_bytes: int = 148              # payload + metadata on the wire
+    api_rate_per_tick: float = 5.0    # 500 calls / 100 s
+    api_burst: float = 100.0
+    write_latency_ticks: float = 1.3  # paper: write latency > arrival period
+    read_latency_ticks: float = 0.9
+    collision_prob: float = 0.0       # sheets concurrent-write clobber chance
+
+    def read_txn_bytes(self, rows_in_store: jax.Array) -> jax.Array:
+        """Bytes on the wire for ONE read request."""
+        if self.kind == "sheets":
+            return jnp.maximum(rows_in_store, 1).astype(jnp.float32) * self.row_bytes
+        return jnp.float32(self.row_bytes)
+
+    def write_txn_bytes(self, n_rows: jax.Array) -> jax.Array:
+        return n_rows.astype(jnp.float32) * self.row_bytes
+
+
+def store_healthy(store: StoreState, now: jax.Array) -> jax.Array:
+    return jnp.asarray(now, jnp.int32) >= store.outage_until
+
+
+def inject_outage(store: StoreState, now: jax.Array, duration: jax.Array) -> StoreState:
+    """Force an outage window [now, now+duration) — used by fault tests."""
+    return dataclasses.replace(
+        store, outage_until=jnp.asarray(now, jnp.int32) + jnp.asarray(duration, jnp.int32)
+    )
+
+
+def commit_writes(
+    store: StoreState,
+    n_rows: jax.Array,
+    n_calls: jax.Array,
+    rng: jax.Array | None,
+    profile: StoreProfile,
+) -> StoreState:
+    """Durably apply ``n_rows`` drained writes (``n_calls`` batched calls)."""
+    n_rows = jnp.asarray(n_rows, jnp.int32)
+    lost = jnp.int32(0)
+    if profile.collision_prob > 0.0 and rng is not None:
+        # Sheets: contemporaneous rows may overwrite each other (§II-D).
+        collide = (
+            jax.random.uniform(rng, ()) < profile.collision_prob
+        ) & (n_rows > 1)
+        lost = jnp.where(collide, 1, 0)
+    return dataclasses.replace(
+        store,
+        drained_total=store.drained_total + n_rows - lost,
+        api_calls=store.api_calls + jnp.asarray(n_calls, jnp.int32),
+        lost_writes=store.lost_writes + lost,
+    )
+
+
+def read_from_store(
+    store: StoreState,
+    enqueue_index: jax.Array,
+    profile: StoreProfile,
+) -> tuple[StoreState, jax.Array, jax.Array]:
+    """One read request for the row that was enqueued at ``enqueue_index``.
+
+    Returns (store, found, txn_bytes).  FIFO drain ⇒ present iff
+    enqueue_index < drained_total.  Sheets semantics: the whole table crosses
+    the wire regardless of whether the row is found.
+    """
+    found = jnp.asarray(enqueue_index, jnp.int32) < store.drained_total
+    txn = profile.read_txn_bytes(store.drained_total)
+    store = dataclasses.replace(store, api_calls=store.api_calls + 1)
+    return store, found, txn

@@ -1,0 +1,113 @@
+"""Cache-line state for FLIC, as a pytree of fixed-shape JAX arrays.
+
+The paper's cache row (Table I) is::
+
+    | Index | Valid? | Time Inserted | Data Timestamp | Node ID | Data |
+
+We materialize a set-associative cache: ``sets x ways`` lines per node.  The
+paper's prototype used a small per-node python dict (effectively fully
+associative); set-associativity is the standard static-shape embodiment and
+degenerates to fully-associative when ``sets == 1``.
+
+All timestamps are *logical ticks* (int32).  Keys are uint32 hashes of
+(generation tick, producer node) — see ``repro.utils.hashing``.  A ``dirty``
+bit marks lines whose producer is the local node and which have not yet been
+flushed to the backing store (used by the write-back policy; the
+write-through-behind policy enqueues at generation time instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+NULL_TAG = jnp.uint32(0xFFFFFFFF)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CacheState:
+    """Per-node cache contents. Batched over nodes with a leading axis."""
+
+    tags: jax.Array      # (S, W) uint32 — key hash (full hash kept as tag)
+    data_ts: jax.Array   # (S, W) int32  — generation timestamp of the datum
+    ins_ts: jax.Array    # (S, W) int32  — tick the line was inserted locally
+    origin: jax.Array    # (S, W) int32  — producer node id
+    valid: jax.Array     # (S, W) bool
+    dirty: jax.Array     # (S, W) bool
+    last_use: jax.Array  # (S, W) int32  — last access tick (LRU)
+    data: jax.Array      # (S, W, D)     — payload lanes
+
+    @property
+    def num_sets(self) -> int:
+        return self.tags.shape[-2]
+
+    @property
+    def num_ways(self) -> int:
+        return self.tags.shape[-1]
+
+    @property
+    def payload_dim(self) -> int:
+        return self.data.shape[-1]
+
+    @property
+    def capacity(self) -> int:
+        return self.num_sets * self.num_ways
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CacheLine:
+    """One row in flight (a broadcast update / a fill / an eviction)."""
+
+    key: jax.Array      # uint32 scalar (or batched)
+    data_ts: jax.Array  # int32
+    origin: jax.Array   # int32
+    data: jax.Array     # (D,)
+    valid: jax.Array    # bool — lanes may be masked off in batched flows
+    dirty: jax.Array    # bool — needs a backing-store write if evicted
+
+
+def empty_cache(
+    sets: int,
+    ways: int,
+    payload_dim: int,
+    dtype: Any = jnp.float32,
+    batch: tuple[int, ...] = (),
+) -> CacheState:
+    """An all-invalid cache (optionally batched over leading ``batch`` dims)."""
+    shp = (*batch, sets, ways)
+    return CacheState(
+        tags=jnp.full(shp, NULL_TAG, jnp.uint32),
+        data_ts=jnp.full(shp, -1, jnp.int32),
+        ins_ts=jnp.full(shp, -1, jnp.int32),
+        origin=jnp.full(shp, -1, jnp.int32),
+        valid=jnp.zeros(shp, bool),
+        dirty=jnp.zeros(shp, bool),
+        last_use=jnp.full(shp, -1, jnp.int32),
+        data=jnp.zeros((*shp, payload_dim), dtype),
+    )
+
+
+def null_line(payload_dim: int, dtype: Any = jnp.float32) -> CacheLine:
+    return CacheLine(
+        key=NULL_TAG,
+        data_ts=jnp.int32(-1),
+        origin=jnp.int32(-1),
+        data=jnp.zeros((payload_dim,), dtype),
+        valid=jnp.asarray(False),
+        dirty=jnp.asarray(False),
+    )
+
+
+def set_index(cache_or_sets, key: jax.Array) -> jax.Array:
+    """Map a key hash to its set index."""
+    sets = cache_or_sets if isinstance(cache_or_sets, int) else cache_or_sets.num_sets
+    return (key % jnp.uint32(sets)).astype(jnp.int32)
+
+
+def occupancy(cache: CacheState) -> jax.Array:
+    """Number of valid lines (per node if batched)."""
+    return jnp.sum(cache.valid, axis=(-2, -1))

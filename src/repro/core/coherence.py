@@ -1,0 +1,138 @@
+"""Soft cache coherence: loss models, broadcast merge, and the paper's bound.
+
+Paper §II-B: updates are UDP broadcasts that each receiver may lose
+independently.  Coherence is "soft": the fog is considered coherent as long
+as *some* node holds the newest version; readers reconcile divergent replies
+by max data-timestamp.  The probability that an update is lost at *every*
+node is bounded via Markov:  Pr[sum L_k >= N-1] <= E[L]/(N-1).
+
+We provide:
+  * ``bernoulli_loss_mask`` — i.i.d. loss, the paper's model;
+  * ``gilbert_elliott_step`` — bursty channel (good/bad Markov chain), a
+    harsher model used in robustness tests;
+  * ``merge_broadcasts`` — apply one tick's worth of fog broadcasts to every
+    node cache under a delivery mask;
+  * ``markov_loss_bound`` / ``exact_total_loss_prob`` — the analytical bound
+    beside the exact i.i.d. value, used by tests & benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache_state import CacheLine, CacheState
+from repro.core.flic import insert_batch
+
+
+def bernoulli_loss_mask(
+    rng: jax.Array, shape: tuple[int, ...], loss_prob: float | jax.Array
+) -> jax.Array:
+    """True = DELIVERED. i.i.d. per (receiver, sender) packet loss."""
+    return jax.random.uniform(rng, shape) >= loss_prob
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GilbertElliott:
+    """Two-state bursty loss channel per receiver."""
+
+    bad: jax.Array  # (N,) bool — channel state per receiver
+
+    @staticmethod
+    def init(n: int) -> "GilbertElliott":
+        return GilbertElliott(bad=jnp.zeros((n,), bool))
+
+
+def gilbert_elliott_step(
+    state: GilbertElliott,
+    rng: jax.Array,
+    shape: tuple[int, ...],
+    p_g2b: float = 0.05,
+    p_b2g: float = 0.4,
+    loss_good: float = 0.01,
+    loss_bad: float = 0.5,
+) -> tuple[GilbertElliott, jax.Array]:
+    """Advance the channel one tick; returns (state, delivered_mask(shape))."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    n = state.bad.shape[0]
+    assert shape[0] == n, "mask leading axis must be receivers"
+    flip_up = jax.random.uniform(k1, (n,)) < p_g2b
+    flip_dn = jax.random.uniform(k2, (n,)) < p_b2g
+    bad = jnp.where(state.bad, ~flip_dn, flip_up)
+    loss_p = jnp.where(bad, loss_bad, loss_good)  # (N,)
+    loss_p = loss_p.reshape((n,) + (1,) * (len(shape) - 1))
+    delivered = jax.random.uniform(k3, shape) >= loss_p
+    return GilbertElliott(bad=bad), delivered
+
+
+def merge_broadcasts(
+    caches: CacheState,
+    rows: CacheLine,
+    delivered: jax.Array,
+    now: jax.Array,
+    self_always: bool = True,
+) -> tuple[CacheState, CacheLine]:
+    """Apply one gossip round: every node merges the R broadcast rows.
+
+    Args:
+      caches: batched (N, S, W) cache states.
+      rows: CacheLine with leading axis R (one row per broadcasting node).
+      delivered: (N, R) bool — delivery mask per (receiver, sender).
+      self_always: a node always "hears" its own broadcast (loopback).
+
+    Returns (caches, evictions) where evictions has leading axes (N, R).
+    Receivers store broadcast lines as CLEAN (dirty=False): only the origin
+    node is responsible for the backing-store write (paper §II-A.1).
+    """
+    n = caches.tags.shape[0]
+    r = rows.key.shape[0]
+    if self_always:
+        origins = jnp.asarray(rows.origin, jnp.int32)  # (R,)
+        self_mask = origins[None, :] == jnp.arange(n, dtype=jnp.int32)[:, None]
+        delivered = delivered | self_mask
+
+    def per_node(cache, deliv_row, node_idx):
+        lines = CacheLine(
+            key=rows.key,
+            data_ts=rows.data_ts,
+            origin=rows.origin,
+            data=rows.data,
+            valid=jnp.asarray(rows.valid) & deliv_row,
+            # origin keeps it dirty; receivers store clean
+            dirty=jnp.asarray(rows.dirty)
+            & (jnp.asarray(rows.origin, jnp.int32) == node_idx),
+        )
+        return insert_batch(cache, lines, now)
+
+    caches, evictions = jax.vmap(per_node)(
+        caches, delivered, jnp.arange(n, dtype=jnp.int32)
+    )
+    del r
+    return caches, evictions
+
+
+# --------------------------------------------------------------------------
+# Analytics: the paper's §II-B bound and the exact i.i.d. loss probability.
+# --------------------------------------------------------------------------
+
+def markov_loss_bound(loss_prob: float, n_nodes: int) -> float:
+    """Markov bound on near-total update loss (paper §II-B).
+
+    Pr[sum L_k >= N-1] <= E[sum L_k]/(N-1) = N·p/(N-1).
+
+    NOTE (erratum): the paper prints E[L_k]/(N-1) = p/(N-1), dropping the
+    N factor from E[sum L_k] = N·p.  The corrected bound is implemented
+    here; it still decreases toward p as N grows, preserving the paper's
+    qualitative claim, and it actually dominates the exact i.i.d. total-loss
+    probability p^N for all p (the printed form fails at p -> 1).
+    """
+    if n_nodes <= 1:
+        return 1.0
+    return min(1.0, n_nodes * loss_prob / (n_nodes - 1))
+
+
+def exact_total_loss_prob(loss_prob: float, n_nodes: int) -> float:
+    """Exact i.i.d. probability that ALL N receivers lose the packet."""
+    return float(loss_prob) ** int(n_nodes)

@@ -1,0 +1,329 @@
+"""Pod-scale FLIC: the fog cache under ``shard_map``.
+
+This is the production embodiment of the paper's protocol on a TPU mesh
+(DESIGN.md §2): fog *nodes* are sharded across a mesh axis (the "fog" axis —
+at pod scale that is the ``data`` axis); the UDP broadcast becomes an
+``all_gather`` of the tick's update rows along that axis; soft coherence and
+the loss model are unchanged (loss masks are per-receiver PRNG draws, used
+both for reproduction fidelity and for *deliberate* gossip subsampling as a
+bandwidth knob).
+
+Global singletons (write-behind queue, backing store) are computed
+*replicated*: every device runs the identical deterministic update, a
+standard SPMD idiom that needs no extra communication.
+
+The fog read resolves soft coherence across devices with a max-timestamp
+reduction; ties are impossible because the tie-break key appends the global
+node id (each key is held with a unique (ts, node) at any device... multiple
+devices may cache copies, so the tie-break appends the *responder id*, making
+the argmax unique and the payload psum exact).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import backing_store as bs
+from repro.core import writeback as wb
+from repro.core.cache_state import CacheLine, CacheState, empty_cache
+from repro.core.coherence import bernoulli_loss_mask
+from repro.core.metrics import TickMetrics
+from repro.core.simulator import SimConfig, _insert_own_rows, _merge_directory, _payload_for
+from repro.utils.hashing import hash2_u32
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FogShardState:
+    """Per-device slice of the fog + replicated global state."""
+
+    caches: CacheState       # (n_local, S, W, ...) — this device's nodes
+    queue: wb.WriteQueue     # replicated
+    store: bs.StoreState     # replicated
+    tick: jax.Array          # replicated int32
+    rng: jax.Array           # replicated key (devices derive per-shard keys)
+
+
+def init_fog_shard(cfg: SimConfig, n_local: int, seed: int = 0) -> FogShardState:
+    return FogShardState(
+        caches=empty_cache(
+            cfg.cache_sets, cfg.cache_ways, cfg.payload_dim, jnp.float32,
+            batch=(n_local,),
+        ),
+        queue=wb.empty_queue(cfg.queue_capacity),
+        store=bs.init_store(),
+        tick=jnp.int32(0),
+        rng=jax.random.PRNGKey(seed),
+    )
+
+
+def _shard_rng(rng: jax.Array, tick: jax.Array, rank: jax.Array, salt: int) -> jax.Array:
+    """Deterministic per-(device, tick, purpose) key from the replicated key."""
+    return jax.random.fold_in(jax.random.fold_in(jax.random.fold_in(rng, salt), tick), rank)
+
+
+def fog_shard_tick(
+    cfg: SimConfig, axis: str, state: FogShardState
+) -> tuple[FogShardState, TickMetrics]:
+    """One tick of the distributed fog. Must run inside shard_map over ``axis``.
+
+    Communication pattern per tick (this is what the dry-run lowers):
+      * 1× all_gather of (n_local, row) fresh rows      — the broadcast;
+      * 1× all_gather of (n_local, key) read queries    — the fog read;
+      * 1× psum of per-query response records           — soft-coherence merge;
+      * scalar psums for metrics.
+    """
+    ndev = jax.lax.axis_size(axis)
+    rank = jax.lax.axis_index(axis)
+    n_local = state.caches.tags.shape[0]
+    n_total = ndev * n_local
+    t = state.tick
+    node_ids = rank * n_local + jnp.arange(n_local, dtype=jnp.int32)
+
+    k_loss = _shard_rng(state.rng, t, rank, 1)
+    k_age = _shard_rng(state.rng, t, rank, 2)
+    k_src = _shard_rng(state.rng, t, rank, 3)
+    k_qloss = _shard_rng(state.rng, t, rank, 4)
+
+    # ---- 1. generate + broadcast (all_gather) ------------------------------
+    keys_local = hash2_u32(jnp.full((n_local,), t, jnp.uint32), node_ids.astype(jnp.uint32))
+    rows_local = CacheLine(
+        key=keys_local,
+        data_ts=jnp.full((n_local,), t, jnp.int32),
+        origin=node_ids,
+        data=_payload_for(keys_local, cfg.payload_dim),
+        valid=jnp.ones((n_local,), bool),
+        dirty=jnp.zeros((n_local,), bool),
+    )
+    rows_all: CacheLine = jax.tree.map(
+        lambda x: jax.lax.all_gather(x, axis, tiled=True), rows_local
+    )
+    delivered = bernoulli_loss_mask(k_loss, (n_local, n_total), cfg.loss_prob) \
+        if cfg.loss_model != "none" else jnp.ones((n_local, n_total), bool)
+
+    caches = _insert_own_rows(state.caches, rows_local, t)
+    caches = _merge_directory(caches, rows_all, delivered, t, node_ids=node_ids)
+    gossip_bytes = jnp.float32(n_total * cfg.row_bytes)
+
+    # ---- 2. replicated write-behind enqueue --------------------------------
+    queue, _ = wb.enqueue(
+        state.queue, rows_all.key, rows_all.data_ts, rows_all.origin,
+        jnp.ones((n_total,), bool),
+    )
+
+    # ---- 3. reads -----------------------------------------------------------
+    reading = ((t + node_ids) % cfg.read_period == 0) & (t > 0)
+    window_ticks = max(1, round(cfg.read_window_keys / n_total))
+    window = jnp.minimum(jnp.int32(window_ticks), jnp.maximum(t, 1))
+    ages = jnp.minimum(jax.random.randint(k_age, (n_local,), 0, window), t)
+    src = jax.random.randint(k_src, (n_local,), 0, n_total, dtype=jnp.int32)
+    r_tick = t - ages
+    r_keys = hash2_u32(r_tick.astype(jnp.uint32), src.astype(jnp.uint32))
+
+    # local probe
+    sidx_l = (r_keys % jnp.uint32(cfg.cache_sets)).astype(jnp.int32)
+
+    def self_probe(cache: CacheState, key, sidx, is_reading):
+        match = cache.valid[sidx] & (cache.tags[sidx] == key)
+        hit = jnp.any(match) & is_reading
+        way = jnp.argmax(match)
+        s = jnp.where(hit, sidx, cache.num_sets)
+        cache = dataclasses.replace(
+            cache, last_use=cache.last_use.at[s, way].max(t, mode="drop")
+        )
+        return cache, hit
+
+    caches, hit_local = jax.vmap(self_probe)(caches, r_keys, sidx_l, reading)
+    need_fog = reading & ~hit_local
+
+    # fog query: gather all queries, probe local shard, reduce by max-ts.
+    q_keys = jax.lax.all_gather(r_keys, axis, tiled=True)          # (Nq,)
+    q_need = jax.lax.all_gather(need_fog, axis, tiled=True)        # (Nq,)
+    nq = n_total
+    sidx_q = (q_keys % jnp.uint32(cfg.cache_sets)).astype(jnp.int32)
+
+    def probe_cache(cache: CacheState):
+        tags_q = cache.tags[sidx_q]                                # (Nq, W)
+        match = cache.valid[sidx_q] & (tags_q == q_keys[:, None])
+        hit = jnp.any(match, axis=1)
+        way = jnp.argmax(match, axis=1)
+        ts = jnp.where(hit, cache.data_ts[sidx_q, way], -1)
+        return hit, way, ts, cache.data[sidx_q, way]
+
+    hits_qc, way_qc, ts_qc, data_qc = jax.vmap(probe_cache)(caches)  # (nl, Nq, ...)
+    if cfg.loss_model != "none":
+        resp_mask = bernoulli_loss_mask(k_qloss, (n_local, nq), cfg.loss_prob)
+        hits_qc = hits_qc & resp_mask
+    hits_qc = hits_qc & q_need[None, :]
+
+    # Soft-coherence resolve: max data_ts wins; ties broken by responder id
+    # (two pmax rounds — avoids int32 overflow of a fused score).
+    ts_masked = jnp.where(hits_qc, ts_qc, -1)                      # (nl, Nq)
+    win_ts = jax.lax.pmax(jnp.max(ts_masked, axis=0), axis)        # (Nq,)
+    fog_hit_q = win_ts >= 0
+    at_max = hits_qc & (ts_qc == win_ts[None, :])
+    nid = jnp.where(at_max, node_ids[:, None], -1)
+    win_node = jax.lax.pmax(jnp.max(nid, axis=0), axis)            # (Nq,)
+    is_winner = at_max & (node_ids[:, None] == win_node[None, :])  # ≤1 True globally
+    win_data = jnp.einsum("cq,cqd->qd", is_winner.astype(data_qc.dtype), data_qc)
+    win_data = jax.lax.psum(win_data, axis)                        # (Nq, D)
+
+    # responder LRU refresh
+    def touch(cache: CacheState, hits_c, ways_c):
+        s = jnp.where(hits_c, sidx_q, cache.num_sets)
+        return dataclasses.replace(
+            cache,
+            last_use=cache.last_use.at[s, ways_c].max(
+                jnp.full_like(s, t), mode="drop"
+            ),
+        )
+
+    caches = jax.vmap(touch)(caches, hits_qc, way_qc)
+
+    # ---- 4. store reads for global misses (replicated computation) ---------
+    q_src = jax.lax.all_gather(src, axis, tiled=True)
+    q_rtick = jax.lax.all_gather(r_tick, axis, tiled=True)
+    store_read = q_need & ~fog_hit_q
+    in_store = (q_rtick * n_total + q_src) < state.store.drained_total
+    found_q = store_read & in_store
+    n_store_reads = jnp.sum(store_read.astype(jnp.int32))
+    txn = cfg.store.read_txn_bytes(state.store.drained_total)
+    store = dataclasses.replace(
+        state.store, api_calls=state.store.api_calls + n_store_reads
+    )
+
+    # ---- 5. fill readers' local caches --------------------------------------
+    def my(xs):
+        """This rank's slice of an all-gathered (n_total, ...) array."""
+        return jax.lax.dynamic_slice_in_dim(xs, rank * n_local, n_local, 0)
+
+    fill_ok = my(fog_hit_q | found_q)
+    fill_lines = CacheLine(
+        key=r_keys,
+        data_ts=jnp.where(my(fog_hit_q), my(win_ts), r_tick),
+        origin=src,
+        data=jnp.where(
+            my(fog_hit_q)[:, None], my(win_data),
+            _payload_for(r_keys, cfg.payload_dim),
+        ),
+        valid=fill_ok,
+        dirty=jnp.zeros((n_local,), bool),
+    )
+    from repro.core.flic import insert as _insert
+
+    def fill(cache, line):
+        cache, _ = _insert(cache, line, t)
+        return cache
+
+    caches = jax.vmap(fill)(caches, fill_lines)
+
+    # ---- 6. writer drain (replicated) ---------------------------------------
+    healthy = bs.store_healthy(store, t)
+    queue, n_drained, n_calls = wb.drain(
+        queue, t, healthy,
+        rate_per_tick=cfg.store.api_rate_per_tick,
+        burst=cfg.store.api_burst,
+        max_per_tick=cfg.writer_max_per_tick,
+    )
+    store = bs.commit_writes(store, n_drained, n_calls, None, cfg.store)
+
+    # ---- metrics (global, replicated values) --------------------------------
+    n_reads = jnp.sum(jax.lax.all_gather(reading, axis, tiled=True).astype(jnp.int32))
+    n_hit_local = jax.lax.psum(jnp.sum(hit_local.astype(jnp.int32)), axis)
+    n_fog_hit = jnp.sum(fog_hit_q.astype(jnp.int32))
+    n_resp = jax.lax.psum(jnp.sum(hits_qc.astype(jnp.int32)), axis)
+    wan_rx = n_store_reads.astype(jnp.float32) * txn
+    wan_tx = cfg.store.write_txn_bytes(n_drained)
+    metrics = dataclasses.replace(
+        TickMetrics.zeros(),
+        wan_tx_bytes=wan_tx,
+        wan_rx_bytes=wan_rx,
+        lan_bytes=gossip_bytes
+        + jnp.sum(q_need.astype(jnp.float32)) * cfg.query_bytes
+        + n_resp.astype(jnp.float32) * cfg.row_bytes,
+        reads=n_reads,
+        hits_local=n_hit_local,
+        hits_fog=n_fog_hit,
+        misses=n_store_reads,
+        store_found=jnp.sum(found_q.astype(jnp.int32)),
+        store_missing=jnp.sum((store_read & ~in_store).astype(jnp.int32)),
+        writes_gen=jnp.int32(n_total),
+        writes_drained=n_drained,
+        queue_depth=queue.size(),
+        queue_dropped=queue.dropped,
+        store_txn_bytes=wan_rx + wan_tx,
+        store_txns=n_store_reads + n_calls,
+        read_latency_sum=jnp.float32(0.0),
+        baseline_wan_bytes=jnp.float32(n_total * cfg.row_bytes)
+        + n_reads.astype(jnp.float32) * cfg.store.read_txn_bytes((t + 1) * n_total),
+    )
+    new_state = FogShardState(
+        caches=caches, queue=queue, store=store, tick=t + 1, rng=state.rng
+    )
+    return new_state, metrics
+
+
+def run_distributed_sim(
+    mesh: Mesh,
+    cfg: SimConfig,
+    ticks: int,
+    axis: str = "data",
+    seed: int = 0,
+):
+    """Run the sharded fog for ``ticks`` on ``mesh`` (nodes over ``axis``).
+
+    ``cfg.n_nodes`` must divide evenly over the axis.  Returns the summarized
+    metrics dict (device-replicated scalars pulled to host).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    ndev = mesh.shape[axis]
+    assert cfg.n_nodes % ndev == 0, "n_nodes must divide the fog axis"
+    n_local = cfg.n_nodes // ndev
+
+    state = init_fog_shard(cfg, cfg.n_nodes, seed)  # host-side full fog
+    # Shard caches over the axis; everything else replicated.
+    cache_spec = jax.tree.map(lambda _: P(axis), state.caches)
+    repl = P()
+    state_spec = FogShardState(
+        caches=cache_spec,
+        queue=jax.tree.map(lambda _: repl, state.queue),
+        store=jax.tree.map(lambda _: repl, state.store),
+        tick=repl,
+        rng=repl,
+    )
+    other_axes = tuple(a for a in mesh.axis_names if a != axis)
+
+    @partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(state_spec,),
+        out_specs=(state_spec, jax.tree.map(lambda _: repl, TickMetrics.zeros())),
+        check_rep=False,
+    )
+    def tick_shard(st):
+        return fog_shard_tick(cfg, axis, st)
+
+    def scan_body(st, _):
+        st, m = tick_shard(st)
+        return st, m
+
+    @jax.jit
+    def run(st):
+        return jax.lax.scan(scan_body, st, None, length=ticks)
+
+    state = jax.device_put(
+        state, NamedSharding(mesh, P())
+    )  # replicate, then reshard caches
+    state = dataclasses.replace(
+        state,
+        caches=jax.device_put(state.caches, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), cache_spec)),
+    )
+    del other_axes, n_local
+    final, series = run(state)
+    return final, series

@@ -1,0 +1,198 @@
+"""Functional FLIC cache operations: lookup, insert/update, LRU eviction.
+
+These are the single-node primitives.  They are written against an unbatched
+``CacheState`` ``(S, W)`` and are ``vmap``-ed over nodes by the simulator and
+``shard_map``-ed over devices by the distributed runtime.
+
+Semantics (paper §II):
+
+* ``local_lookup`` — tag match within the key's set; on a hit the LRU stamp
+  is refreshed.
+* ``insert`` — soft-coherence aware upsert:
+    - if the key is already present, overwrite *only if* the incoming
+      ``data_ts`` is newer (max-timestamp wins — paper §I.A.a);
+    - otherwise fill an invalid way, else evict the LRU way.  The evicted
+      line is returned so the caller can enqueue a write-back.
+* ``lookup_batch`` / ``insert_batch`` — scan/vmap conveniences.
+
+Everything is branch-free (``jnp.where`` / one-hot scatters) so it lowers to
+clean XLA and is directly portable into the Pallas kernels in
+``repro.kernels``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache_state import NULL_TAG, CacheLine, CacheState, set_index
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LookupResult:
+    hit: jax.Array       # bool
+    data_ts: jax.Array   # int32 (-1 on miss)
+    origin: jax.Array    # int32 (-1 on miss)
+    data: jax.Array      # (D,) zeros on miss
+
+
+def _select_way(cache: CacheState, sidx: jax.Array, tag: jax.Array):
+    """Return (way_to_write, present, present_way, lru_way) for a set."""
+    set_tags = cache.tags[sidx]          # (W,)
+    set_valid = cache.valid[sidx]        # (W,)
+    match = set_valid & (set_tags == tag)
+    present = jnp.any(match)
+    present_way = jnp.argmax(match)      # first matching way
+
+    # Victim choice: first invalid way, else least-recently-used way.
+    any_invalid = jnp.any(~set_valid)
+    invalid_way = jnp.argmax(~set_valid)
+    use = jnp.where(set_valid, cache.last_use[sidx], jnp.iinfo(jnp.int32).max)
+    lru_way = jnp.argmin(use)
+    victim_way = jnp.where(any_invalid, invalid_way, lru_way)
+
+    way = jnp.where(present, present_way, victim_way)
+    return way, present, present_way, victim_way
+
+
+def local_lookup(
+    cache: CacheState, key: jax.Array, now: jax.Array, update_lru: bool = True
+) -> tuple[CacheState, LookupResult]:
+    """Probe the local cache for ``key``; refresh LRU on hit."""
+    key = jnp.asarray(key, jnp.uint32)
+    sidx = set_index(cache, key)
+    set_tags = cache.tags[sidx]
+    set_valid = cache.valid[sidx]
+    match = set_valid & (set_tags == key)
+    hit = jnp.any(match)
+    way = jnp.argmax(match)
+
+    res = LookupResult(
+        hit=hit,
+        data_ts=jnp.where(hit, cache.data_ts[sidx, way], -1),
+        origin=jnp.where(hit, cache.origin[sidx, way], -1),
+        data=jnp.where(hit, cache.data[sidx, way], jnp.zeros_like(cache.data[sidx, way])),
+    )
+    if update_lru:
+        new_last = cache.last_use.at[sidx, way].set(
+            jnp.where(hit, jnp.asarray(now, jnp.int32), cache.last_use[sidx, way])
+        )
+        cache = dataclasses.replace(cache, last_use=new_last)
+    return cache, res
+
+
+def insert(
+    cache: CacheState, line: CacheLine, now: jax.Array
+) -> tuple[CacheState, CacheLine]:
+    """Soft-coherence upsert of one line. Returns (new_cache, evicted_line).
+
+    The returned eviction is ``valid`` only when a *live* line was displaced
+    (not overwritten in place) — and ``dirty`` tells the caller whether the
+    backing store still needs it.  If ``line.valid`` is False the call is a
+    no-op (used for masked/lost broadcasts).
+    """
+    key = jnp.asarray(line.key, jnp.uint32)
+    now = jnp.asarray(now, jnp.int32)
+    sidx = set_index(cache, key)
+    way, present, _, _ = _select_way(cache, sidx, key)
+
+    old_ts = cache.data_ts[sidx, way]
+    # Soft coherence: if present, only a strictly newer timestamp overwrites.
+    stale_incoming = present & (jnp.asarray(line.data_ts, jnp.int32) <= old_ts)
+    do_write = jnp.asarray(line.valid) & ~stale_incoming
+
+    # Eviction record: displaced a DIFFERENT live line (not an in-place update).
+    displaced = do_write & ~present & cache.valid[sidx, way]
+    evicted = CacheLine(
+        key=jnp.where(displaced, cache.tags[sidx, way], NULL_TAG),
+        data_ts=jnp.where(displaced, old_ts, -1),
+        origin=jnp.where(displaced, cache.origin[sidx, way], -1),
+        data=jnp.where(displaced, cache.data[sidx, way], jnp.zeros_like(line.data)),
+        valid=displaced,
+        dirty=displaced & cache.dirty[sidx, way],
+    )
+
+    def wr(field, value):
+        return field.at[sidx, way].set(jnp.where(do_write, value, field[sidx, way]))
+
+    cache = CacheState(
+        tags=wr(cache.tags, key),
+        data_ts=wr(cache.data_ts, jnp.asarray(line.data_ts, jnp.int32)),
+        ins_ts=wr(cache.ins_ts, now),
+        origin=wr(cache.origin, jnp.asarray(line.origin, jnp.int32)),
+        valid=wr(cache.valid, True),
+        dirty=wr(cache.dirty, jnp.asarray(line.dirty)),
+        last_use=wr(cache.last_use, now),
+        data=cache.data.at[sidx, way].set(
+            jnp.where(do_write, line.data, cache.data[sidx, way])
+        ),
+    )
+    return cache, evicted
+
+
+def insert_batch(
+    cache: CacheState, lines: CacheLine, now: jax.Array
+) -> tuple[CacheState, CacheLine]:
+    """Sequentially upsert a batch of lines (leading axis R). Returns evictions.
+
+    Sequential application (lax.scan) keeps same-set conflicts within one
+    batch exact — matching the paper's per-packet processing order.
+    """
+
+    def step(c, ln):
+        c, ev = insert(c, ln, now)
+        return c, ev
+
+    return jax.lax.scan(step, cache, lines)
+
+
+def invalidate(cache: CacheState, key: jax.Array) -> CacheState:
+    """Drop a key if present (used by serving page-free paths)."""
+    key = jnp.asarray(key, jnp.uint32)
+    sidx = set_index(cache, key)
+    match = cache.valid[sidx] & (cache.tags[sidx] == key)
+    new_valid = cache.valid.at[sidx].set(cache.valid[sidx] & ~match)
+    return dataclasses.replace(cache, valid=new_valid)
+
+
+# --------------------------------------------------------------------------
+# Fog-level (multi-node) read: the paper's broadcast query.
+# --------------------------------------------------------------------------
+
+def fog_lookup(
+    caches: CacheState,
+    key: jax.Array,
+    now: jax.Array,
+    respond_mask: jax.Array | None = None,
+) -> tuple[CacheState, LookupResult, jax.Array]:
+    """Broadcast-read ``key`` against all N node caches (leading axis N).
+
+    Returns (caches, best_result, responders):
+      * ``best_result`` — soft coherence pick: among responding hits, the one
+        with the max data timestamp (paper §I.A.a).
+      * ``responders`` — (N,) bool, which nodes had the line (paper's read
+        simulator "keeps track of whichever nodes had the value").
+
+    ``respond_mask`` models lost request/response packets (None = reliable).
+    LRU is refreshed on every responder that hit, mirroring a served read.
+    """
+    n = caches.tags.shape[0]
+    caches, results = jax.vmap(local_lookup, in_axes=(0, None, None))(caches, key, now)
+    hits = results.hit
+    if respond_mask is not None:
+        hits = hits & respond_mask
+    responders = hits
+
+    ts = jnp.where(hits, results.data_ts, -1)
+    best = jnp.argmax(ts)  # ties → lowest node id, deterministic
+    any_hit = jnp.any(hits)
+    best_res = LookupResult(
+        hit=any_hit,
+        data_ts=jnp.where(any_hit, ts[best], -1),
+        origin=jnp.where(any_hit, results.origin[best], -1),
+        data=jnp.where(any_hit, results.data[best], jnp.zeros_like(results.data[0])),
+    )
+    del n
+    return caches, best_res, responders

@@ -1,0 +1,396 @@
+"""Vectorized N-node fog simulation of FLIC under ``lax.scan``.
+
+This reproduces the paper's Docker testbed (§III) exactly in semantics but
+as a single JAX program: all N node caches are a batched ``CacheState``;
+ticks are 1 s; each node writes one fresh row per tick and issues one read
+every ``read_period`` ticks; the single queued writer drains to a simulated
+cloud store under rate limiting and failures.
+
+Workload model (from §III-B, with ambiguities resolved — see DESIGN.md §2):
+
+* Writes: node ``n`` at tick ``t`` generates row key = hash(t, n), broadcast
+  to the fog.  **Insert policy** (config):
+    - ``"directory"`` (default): the payload is cached at the ORIGIN node
+      (and later at read-fillers); hearers record the key in their key
+      directory and apply coherence *updates* to copies they already hold.
+      This matches the paper's Fig. 3/4 scaling (fog capacity grows with N).
+    - ``"replicate"``: every hearer inserts the full row (ablation mode).
+* Reads: every ``read_period`` ticks (staggered by node id), a node samples
+  a key uniformly from its directory — the last ``read_window_keys`` keys it
+  heard fog-wide, i.e. ages ~ U[0, window_keys/N] ticks ("preferentially
+  reading recent data", §III-B).  Read path: local -> fog broadcast -> store.
+  Fills on fog/store hits land in the reader's local cache.
+* The store holds exactly the first ``drained_total`` enqueued rows (FIFO
+  single writer), so durability of row (t, n) is the integer test
+  ``t*N + n < drained_total``.  (Exact while the ring never overflows; with
+  injected outages the tiny overflow tail is counted in ``queue_dropped``.)
+
+The function is pure; everything (losses, outages, workload) is driven by a
+single PRNG key, so runs are exactly reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backing_store as bs
+from repro.core import writeback as wb
+from repro.core.cache_state import CacheLine, CacheState, empty_cache
+from repro.core.coherence import GilbertElliott, bernoulli_loss_mask, gilbert_elliott_step
+from repro.core.metrics import TickMetrics
+from repro.utils.hashing import hash2_u32
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Static configuration of one fog simulation."""
+
+    n_nodes: int = 50
+    cache_lines: int = 200           # per-node capacity (paper's "cache size")
+    cache_ways: int = 4              # set-associativity
+    payload_dim: int = 8             # payload lanes materialized in sim
+    row_bytes: int = 148             # wire size of one row (payload+metadata)
+    query_bytes: int = 32            # fog read-request packet
+    read_period: int = 15            # paper: one read per 15 s per node
+    read_window_keys: int = 2000     # reader's key-directory depth (in keys)
+    loss_model: Literal["none", "bernoulli", "gilbert_elliott"] = "bernoulli"
+    loss_prob: float = 0.02          # per-(receiver,packet) UDP loss
+    insert_policy: Literal["directory", "replicate"] = "directory"
+    queue_capacity: int = 8192
+    writer_max_per_tick: int = 64
+    store: bs.StoreProfile = dataclasses.field(default_factory=bs.StoreProfile)
+    # Modeled latency terms (ticks == seconds), for the Fig. 2 reproduction.
+    lat_local: float = 1e-4
+    lat_lan_base: float = 2e-3
+    lat_lan_per_node: float = 1.2e-4   # paper's Docker CPU-contention artifact
+    lat_store: float = 1.1
+    seed: int = 0
+
+    @property
+    def cache_sets(self) -> int:
+        assert self.cache_lines % self.cache_ways == 0, "lines % ways != 0"
+        return self.cache_lines // self.cache_ways
+
+    @property
+    def window_ticks(self) -> int:
+        return max(1, round(self.read_window_keys / self.n_nodes))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SimState:
+    caches: CacheState          # batched (N, S, W, ...)
+    queue: wb.WriteQueue
+    store: bs.StoreState
+    channel: GilbertElliott     # used only under the GE loss model
+    tick: jax.Array             # int32
+    rng: jax.Array
+
+
+def init_sim(cfg: SimConfig) -> SimState:
+    return SimState(
+        caches=empty_cache(
+            cfg.cache_sets, cfg.cache_ways, cfg.payload_dim, jnp.float32,
+            batch=(cfg.n_nodes,),
+        ),
+        queue=wb.empty_queue(cfg.queue_capacity),
+        store=bs.init_store(),
+        channel=GilbertElliott.init(cfg.n_nodes),
+        tick=jnp.int32(0),
+        rng=jax.random.PRNGKey(cfg.seed),
+    )
+
+
+def _payload_for(key: jax.Array, dim: int) -> jax.Array:
+    """Deterministic pseudo-random payload ~ U[0,1) from a key hash.
+
+    The paper's nodes generate "uniformly distributed random data" with the
+    statistics of compressed+encrypted content; deriving lanes from the key
+    hash reproduces that without extra PRNG state.
+    """
+    lanes = hash2_u32(
+        jnp.asarray(key, jnp.uint32)[..., None],
+        jnp.arange(dim, dtype=jnp.uint32),
+    )
+    return lanes.astype(jnp.float32) / jnp.float32(2**32)
+
+
+def _delivery_mask(cfg: SimConfig, channel, rng, shape):
+    if cfg.loss_model == "none":
+        return channel, jnp.ones(shape, bool)
+    if cfg.loss_model == "bernoulli":
+        return channel, bernoulli_loss_mask(rng, shape, cfg.loss_prob)
+    channel, mask = gilbert_elliott_step(channel, rng, shape)
+    return channel, mask
+
+
+# --------------------------------------------------------------------------
+# Broadcast-merge under the two insert policies.
+# --------------------------------------------------------------------------
+
+def _merge_directory(
+    caches: CacheState, rows: CacheLine, delivered: jax.Array, now,
+    node_ids: jax.Array | None = None,
+) -> CacheState:
+    """Directory policy: payload cached at origin; hearers update resident
+    copies in place iff newer (pure coherence traffic, no insert).
+
+    ``node_ids`` gives the global id of each local cache (defaults to arange;
+    the distributed runtime passes the shard's global ids).
+    """
+    n = caches.tags.shape[0]
+    if node_ids is None:
+        node_ids = jnp.arange(n, dtype=jnp.int32)
+
+    def per_node(cache: CacheState, deliv: jax.Array, node_idx) -> CacheState:
+        # (R,) rows against this node's (S, W) cache.
+        is_origin = jnp.asarray(rows.origin, jnp.int32) == node_idx
+        live = jnp.asarray(rows.valid) & (deliv | is_origin)
+
+        sidx = (rows.key % jnp.uint32(cache.num_sets)).astype(jnp.int32)  # (R,)
+        set_tags = cache.tags[sidx]       # (R, W)
+        set_valid = cache.valid[sidx]     # (R, W)
+        match = set_valid & (set_tags == rows.key[:, None])               # (R, W)
+        newer = rows.data_ts[:, None] > cache.data_ts[sidx]               # (R, W)
+        upd = match & newer & live[:, None]                               # (R, W)
+
+        ways = jnp.argmax(upd, axis=1)                                    # (R,)
+        do = jnp.any(upd, axis=1)
+        s = jnp.where(do, sidx, cache.num_sets)  # OOB -> dropped scatter
+
+        def scat(buf, vals):
+            return buf.at[s, ways].set(vals, mode="drop")
+
+        return dataclasses.replace(
+            cache,
+            data_ts=scat(cache.data_ts, jnp.asarray(rows.data_ts, jnp.int32)),
+            last_use=scat(cache.last_use, jnp.full_like(rows.data_ts, now)),
+            data=cache.data.at[s, ways].set(rows.data, mode="drop"),
+        )
+
+    return jax.vmap(per_node)(caches, delivered, node_ids)
+
+
+def _insert_own_rows(caches: CacheState, rows: CacheLine, now) -> CacheState:
+    """Each node inserts its own generated row (origin-resident payload)."""
+    from repro.core.flic import insert
+
+    def per_node(cache, line):
+        cache, _ev = insert(cache, line, now)
+        return cache
+
+    return jax.vmap(per_node)(caches, rows)
+
+
+def _merge_replicate(
+    caches: CacheState, rows: CacheLine, delivered: jax.Array, now
+) -> CacheState:
+    from repro.core.coherence import merge_broadcasts
+
+    caches, _ev = merge_broadcasts(caches, rows, delivered, now)
+    return caches
+
+
+# --------------------------------------------------------------------------
+# One tick.
+# --------------------------------------------------------------------------
+
+def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMetrics]:
+    n = cfg.n_nodes
+    t = state.tick
+    rng, k_loss, k_age, k_src, k_qloss, k_coll = jax.random.split(state.rng, 6)
+    m = TickMetrics.zeros()
+
+    # ---- 1. generate one fresh row per node -------------------------------
+    node_ids = jnp.arange(n, dtype=jnp.int32)
+    keys = hash2_u32(jnp.full((n,), t, jnp.uint32), node_ids.astype(jnp.uint32))
+    rows = CacheLine(
+        key=keys,
+        data_ts=jnp.full((n,), t, jnp.int32),
+        origin=node_ids,
+        data=_payload_for(keys, cfg.payload_dim),
+        valid=jnp.ones((n,), bool),
+        dirty=jnp.zeros((n,), bool),  # write-through-behind: enqueued below
+    )
+    m = dataclasses.replace(m, writes_gen=jnp.int32(n))
+
+    # ---- 2. fog broadcast under the loss model ----------------------------
+    channel, delivered = _delivery_mask(cfg, state.channel, k_loss, (n, n))
+    caches = state.caches
+    if cfg.insert_policy == "directory":
+        caches = _insert_own_rows(caches, rows, t)
+        caches = _merge_directory(caches, rows, delivered, t)
+    else:
+        caches = _merge_replicate(caches, rows, delivered, t)
+    lan = jnp.float32(n * cfg.row_bytes)  # N broadcasts on the shared medium
+
+    # ---- 3. write-behind enqueue (single writer, §I.A.b) ------------------
+    queue, _acc = wb.enqueue(
+        state.queue, keys, rows.data_ts, rows.origin, jnp.ones((n,), bool)
+    )
+
+    # ---- 4. reads: staggered, one per node per read_period ----------------
+    reading = ((t + node_ids) % cfg.read_period == 0) & (t > 0)
+    window = jnp.minimum(jnp.int32(cfg.window_ticks), jnp.maximum(t, 1))
+    ages = jax.random.randint(k_age, (n,), 0, window, dtype=jnp.int32)
+    ages = jnp.minimum(ages, t)  # only existing data
+    src = jax.random.randint(k_src, (n,), 0, n, dtype=jnp.int32)
+    r_tick = t - ages
+    r_keys = hash2_u32(r_tick.astype(jnp.uint32), src.astype(jnp.uint32))
+
+    # 4a. local probe (vectorized over nodes); LRU refreshed only for nodes
+    # actually reading this tick.
+    def self_probe(cache: CacheState, key, is_reading):
+        sidx = (key % jnp.uint32(cache.num_sets)).astype(jnp.int32)
+        match = cache.valid[sidx] & (cache.tags[sidx] == key)
+        hit = jnp.any(match) & is_reading
+        way = jnp.argmax(match)
+        s = jnp.where(hit, sidx, cache.num_sets)
+        cache = dataclasses.replace(
+            cache, last_use=cache.last_use.at[s, way].max(t, mode="drop")
+        )
+        return cache, hit
+
+    caches, hit_local = jax.vmap(self_probe)(caches, r_keys, reading)
+
+    # 4b. fog query for local misses: reader q probes every cache c.
+    need_fog = reading & ~hit_local
+    sidx_q = (r_keys % jnp.uint32(cfg.cache_sets)).astype(jnp.int32)      # (N,)
+
+    def probe_cache(cache: CacheState):
+        tags_q = cache.tags[sidx_q]        # (N, W) — rows: queries
+        valid_q = cache.valid[sidx_q]
+        match = valid_q & (tags_q == r_keys[:, None])
+        hit = jnp.any(match, axis=1)                                      # (N,)
+        way = jnp.argmax(match, axis=1)
+        ts = jnp.where(hit, cache.data_ts[sidx_q, way], -1)
+        payload = cache.data[sidx_q, way]
+        return hit, way, ts, payload
+
+    hits_qc, way_qc, ts_qc, data_qc = jax.vmap(probe_cache)(caches)
+    # axes: (C caches, Q queries ...) -> transpose to (Q, C)
+    hits_qc = hits_qc.T                                                    # (Q, C)
+    ts_qc = ts_qc.T
+    # Response loss: each responder's reply may be lost independently.
+    channel2 = channel
+    if cfg.loss_model != "none":
+        _, resp_mask = _delivery_mask(cfg, channel2, k_qloss, (n, n))
+        hits_qc = hits_qc & resp_mask
+        ts_qc = jnp.where(hits_qc, ts_qc, -1)
+    best_c = jnp.argmax(jnp.where(hits_qc, ts_qc, -1), axis=1)            # (Q,)
+    fog_hit = need_fog & jnp.any(hits_qc, axis=1)
+    best_payload = data_qc[best_c, jnp.arange(n)]                         # (Q, D)
+    best_ts = jnp.where(fog_hit, ts_qc[jnp.arange(n), best_c], -1)
+
+    # LRU refresh at responders: any line that served a query is touched.
+    def touch(cache: CacheState, hits_for_c, ways_for_c):
+        live = hits_for_c & need_fog                                       # (Q,)
+        s = jnp.where(live, sidx_q, cache.num_sets)
+        return dataclasses.replace(
+            cache,
+            last_use=cache.last_use.at[s, ways_for_c].max(
+                jnp.full_like(s, t), mode="drop"
+            ),
+        )
+
+    caches = jax.vmap(touch)(caches, hits_qc.T, way_qc)
+
+    n_fog_queries = jnp.sum(need_fog.astype(jnp.int32))
+    n_responses = jnp.sum((hits_qc & need_fog[:, None]).astype(jnp.int32))
+    lan = lan + n_fog_queries * cfg.query_bytes + n_responses * cfg.row_bytes
+
+    # 4c. backing store for full fog misses.
+    store_read = reading & ~hit_local & ~fog_hit
+    enq_idx = r_tick * n + src  # FIFO enqueue order = (tick, node)
+    in_store = enq_idx < state.store.drained_total
+    found = store_read & in_store
+    n_store_reads = jnp.sum(store_read.astype(jnp.int32))
+    txn = cfg.store.read_txn_bytes(state.store.drained_total)
+    wan_rx = n_store_reads.astype(jnp.float32) * txn
+    store = dataclasses.replace(
+        state.store, api_calls=state.store.api_calls + n_store_reads
+    )
+
+    # 4d. fill the reader's local cache from fog/store responses.
+    fill_ok = (fog_hit | found)
+    fill_lines = CacheLine(
+        key=r_keys,
+        data_ts=jnp.where(fog_hit, best_ts, r_tick),
+        origin=src,
+        data=jnp.where(fog_hit[:, None], best_payload, _payload_for(r_keys, cfg.payload_dim)),
+        valid=fill_ok,
+        dirty=jnp.zeros((n,), bool),
+    )
+
+    from repro.core.flic import insert as _insert
+
+    def fill(cache, line):
+        cache, _ = _insert(cache, line, t)
+        return cache
+
+    caches = jax.vmap(fill)(caches, fill_lines)
+
+    # ---- 5. writer drain + store commit ------------------------------------
+    healthy = bs.store_healthy(store, t)
+    queue, n_drained, n_calls = wb.drain(
+        queue, t, healthy,
+        rate_per_tick=cfg.store.api_rate_per_tick,
+        burst=cfg.store.api_burst,
+        max_per_tick=cfg.writer_max_per_tick,
+    )
+    store = bs.commit_writes(store, n_drained, n_calls, k_coll, cfg.store)
+    wan_tx = cfg.store.write_txn_bytes(n_drained)
+
+    # ---- 6. latency model + baseline accounting ----------------------------
+    n_reads = jnp.sum(reading.astype(jnp.int32))
+    lat = (
+        jnp.sum(hit_local.astype(jnp.float32)) * cfg.lat_local
+        + jnp.sum(fog_hit.astype(jnp.float32))
+        * (cfg.lat_lan_base + cfg.lat_lan_per_node * n)
+        + n_store_reads.astype(jnp.float32) * cfg.lat_store
+    )
+    # Baseline: no fog cache — every write and every read goes to the store.
+    baseline_table_rows = (t + 1) * n
+    baseline = (
+        jnp.float32(n * cfg.row_bytes)
+        + n_reads.astype(jnp.float32) * cfg.store.read_txn_bytes(baseline_table_rows)
+    )
+
+    metrics = dataclasses.replace(
+        m,
+        wan_tx_bytes=wan_tx,
+        wan_rx_bytes=wan_rx,
+        lan_bytes=lan,
+        reads=n_reads,
+        hits_local=jnp.sum(hit_local.astype(jnp.int32)),
+        hits_fog=jnp.sum(fog_hit.astype(jnp.int32)),
+        misses=n_store_reads,
+        store_found=jnp.sum(found.astype(jnp.int32)),
+        store_missing=jnp.sum((store_read & ~in_store).astype(jnp.int32)),
+        writes_drained=n_drained,
+        queue_depth=queue.size(),
+        queue_dropped=queue.dropped,
+        store_txn_bytes=wan_rx + wan_tx,
+        store_txns=n_store_reads + n_calls,
+        read_latency_sum=lat,
+        baseline_wan_bytes=baseline,
+    )
+    new_state = SimState(
+        caches=caches, queue=queue, store=store, channel=channel,
+        tick=t + 1, rng=rng,
+    )
+    return new_state, metrics
+
+
+@partial(jax.jit, static_argnums=(0, 1))
+def run_sim(cfg: SimConfig, ticks: int, seed: int = 0) -> tuple[SimState, TickMetrics]:
+    """Run ``ticks`` simulation steps; returns (final_state, metric series)."""
+    state = init_sim(dataclasses.replace(cfg, seed=seed))
+    state, series = jax.lax.scan(
+        lambda s, x: sim_tick(cfg, s, x), state, None, length=ticks
+    )
+    return state, series

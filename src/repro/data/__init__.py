@@ -1,0 +1,4 @@
+"""Data pipeline: sharded synthetic token source with FLIC-cached reads."""
+from repro.data.pipeline import DataConfig, DataPipeline, synthetic_batch
+
+__all__ = ["DataConfig", "DataPipeline", "synthetic_batch"]

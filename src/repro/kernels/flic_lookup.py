@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: batched set-associative FLIC cache probe.
+
+The fog-read hot loop (paper §II-A): for a block of queries, locate each
+key's set, tag-compare across ways, and return the max-timestamp matching
+line (soft-coherence tie-break) plus its payload.
+
+TPU mapping (DESIGN.md §2): the cache tables live in VMEM for the duration
+of a query block — tags/ts/valid are a few KB for serving-size shards, and
+the payload tile streams HBM->VMEM once per block.  Queries are processed
+with per-query dynamic row slices (the TPU-friendly replacement for the
+GPU's per-thread hash probe), and the way-select is a one-hot reduction on
+the VPU — no MXU needed.
+
+Block sizes: Q_BLOCK queries per grid step; the whole (S, W) table per step
+(index_map pins block 0) — correct while S*W*(12+4D) bytes fits VMEM, which
+holds for every serving config we ship (<= 4 MB).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Q_BLOCK = 128
+
+
+def _kernel(q_ref, sidx_ref, tags_ref, ts_ref, valid_ref, data_ref,
+            hit_ref, ts_out_ref, payload_ref):
+    qb = q_ref.shape[0]
+    w = tags_ref.shape[1]
+
+    def body(i, _):
+        key = q_ref[i]
+        s = sidx_ref[i]
+        row_tags = pl.load(tags_ref, (pl.ds(s, 1), slice(None)))[0]   # (W,)
+        row_valid = pl.load(valid_ref, (pl.ds(s, 1), slice(None)))[0]
+        row_ts = pl.load(ts_ref, (pl.ds(s, 1), slice(None)))[0]
+        match = (row_valid != 0) & (row_tags == key)
+        ts_m = jnp.where(match, row_ts, -1)
+        hit = jnp.any(match)
+        best = jnp.max(ts_m)
+        onehot = (ts_m == best) & match                                # (W,)
+        # resolve duplicates-with-equal-ts deterministically: first way wins
+        first = jnp.argmax(onehot)
+        pick = (jax.lax.iota(jnp.int32, w) == first) & hit
+        row_data = pl.load(data_ref, (pl.ds(s, 1), slice(None), slice(None)))[0]
+        payload = jnp.sum(jnp.where(pick[:, None], row_data, 0.0), axis=0)
+        hit_ref[i] = hit.astype(jnp.int32)
+        ts_out_ref[i] = jnp.where(hit, best, -1)
+        payload_ref[i, :] = payload
+        return 0
+
+    jax.lax.fori_loop(0, qb, body, 0)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def flic_lookup_pallas(
+    tags: jax.Array,     # (S, W) int32
+    data_ts: jax.Array,  # (S, W) int32
+    valid: jax.Array,    # (S, W) int32/bool
+    data: jax.Array,     # (S, W, D) f32
+    keys: jax.Array,     # (Q,) int32
+    sidx: jax.Array,     # (Q,) int32
+    interpret: bool = True,
+):
+    s, w = tags.shape
+    d = data.shape[-1]
+    q = keys.shape[0]
+    qb = min(Q_BLOCK, q)
+    assert q % qb == 0, (q, qb)
+    grid = (q // qb,)
+
+    full = lambda i: (0, 0)
+    full3 = lambda i: (0, 0, 0)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((qb,), lambda i: (i,)),
+            pl.BlockSpec((qb,), lambda i: (i,)),
+            pl.BlockSpec((s, w), full),
+            pl.BlockSpec((s, w), full),
+            pl.BlockSpec((s, w), full),
+            pl.BlockSpec((s, w, d), full3),
+        ],
+        out_specs=[
+            pl.BlockSpec((qb,), lambda i: (i,)),
+            pl.BlockSpec((qb,), lambda i: (i,)),
+            pl.BlockSpec((qb, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+            jax.ShapeDtypeStruct((q, d), data.dtype),
+        ],
+        interpret=interpret,
+    )(keys, sidx, tags, data_ts, valid.astype(jnp.int32), data)
+    hit, ts, payload = out
+    return hit.astype(bool), ts, payload

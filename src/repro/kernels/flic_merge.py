@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: soft-coherence merge of two aligned cache shards.
+
+Used when reconciling replica cache state (gossip catch-up after a dropped
+round, partition heal, or replica rebuild): line-by-line newest-timestamp-
+wins, the paper's §I.A.a rule.
+
+TPU mapping: the merge is pure elementwise over (sets, ways[, payload]) —
+a VPU streaming kernel.  Tiles of SB sets stream HBM->VMEM; payload rides in
+the same grid step so the select mask is computed once per tile and reused
+for metadata and data (fusing what XLA would otherwise split into several
+elementwise loops over the far larger payload array).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SET_BLOCK = 256
+
+
+def _kernel(tags_a, ts_a, valid_a, data_a, tags_b, ts_b, valid_b, data_b,
+            tags_o, ts_o, valid_o, data_o):
+    va = valid_a[...] != 0
+    vb = valid_b[...] != 0
+    take_b = vb & (~va | (ts_b[...] > ts_a[...]))
+    tags_o[...] = jnp.where(take_b, tags_b[...], tags_a[...])
+    ts_o[...] = jnp.where(take_b, ts_b[...], ts_a[...])
+    valid_o[...] = (va | vb).astype(jnp.int32)
+    data_o[...] = jnp.where(take_b[..., None], data_b[...], data_a[...])
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def flic_merge_pallas(
+    tags_a, ts_a, valid_a, data_a,
+    tags_b, ts_b, valid_b, data_b,
+    interpret: bool = True,
+):
+    s, w = tags_a.shape
+    d = data_a.shape[-1]
+    sb = min(SET_BLOCK, s)
+    assert s % sb == 0
+    grid = (s // sb,)
+    spec2 = pl.BlockSpec((sb, w), lambda i: (i, 0))
+    spec3 = pl.BlockSpec((sb, w, d), lambda i: (i, 0, 0))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec2, spec2, spec2, spec3, spec2, spec2, spec2, spec3],
+        out_specs=[spec2, spec2, spec2, spec3],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, w), tags_a.dtype),
+            jax.ShapeDtypeStruct((s, w), ts_a.dtype),
+            jax.ShapeDtypeStruct((s, w), jnp.int32),
+            jax.ShapeDtypeStruct((s, w, d), data_a.dtype),
+        ],
+        interpret=interpret,
+    )(tags_a, ts_a, valid_a.astype(jnp.int32), data_a,
+      tags_b, ts_b, valid_b.astype(jnp.int32), data_b)
+    tags, ts, valid, data = out
+    return tags, ts, valid.astype(bool), data

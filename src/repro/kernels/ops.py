@@ -1,0 +1,70 @@
+"""Jitted entry points for the Pallas kernels with backend dispatch.
+
+``backend``:
+  * ``"pallas"``      — real TPU lowering (pl.pallas_call, BlockSpec VMEM);
+  * ``"interpret"``   — the same kernel body executed in Python on CPU
+                         (what this container runs; numerics identical);
+  * ``"xla"``         — the pure-jnp oracle from ``ref.py``.
+
+Default: interpret on CPU hosts, pallas on TPU.  ``REPRO_KERNELS=xla``
+forces the oracle (used by the serving engine's dry-run lowering, since a
+TPU kernel cannot lower on the CPU AOT path).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flic_lookup import flic_lookup_pallas
+from repro.kernels.flic_merge import flic_merge_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_KERNELS")
+    if env:
+        return env
+    platform = jax.devices()[0].platform
+    return "pallas" if platform == "tpu" else "interpret"
+
+
+def flic_lookup(tags, data_ts, valid, data, keys, sidx, backend: str | None = None):
+    mode = backend or _mode()
+    if mode == "xla":
+        return ref.flic_lookup_ref(tags, data_ts, valid, data, keys, sidx)
+    return flic_lookup_pallas(
+        tags, data_ts, valid, data, keys, sidx, interpret=(mode != "pallas")
+    )
+
+
+def flic_merge(tags_a, ts_a, valid_a, data_a, tags_b, ts_b, valid_b, data_b,
+               backend: str | None = None):
+    mode = backend or _mode()
+    if mode == "xla":
+        return ref.flic_merge_ref(
+            tags_a, ts_a, valid_a, data_a, tags_b, ts_b, valid_b, data_b
+        )
+    return flic_merge_pallas(
+        tags_a, ts_a, valid_a, data_a, tags_b, ts_b, valid_b, data_b,
+        interpret=(mode != "pallas"),
+    )
+
+
+def paged_attention(q, k_pages, v_pages, page_table, lengths,
+                    backend: str | None = None):
+    mode = backend or _mode()
+    if mode == "xla":
+        return ref.paged_attention_ref(q, k_pages, v_pages, page_table, lengths)
+    return paged_attention_pallas(
+        q, k_pages, v_pages, page_table, lengths, interpret=(mode != "pallas")
+    )
+
+
+def ssd_scan(states, chunk_decay, init=None, backend: str | None = None):
+    mode = backend or _mode()
+    if mode == "xla":
+        return ref.ssd_scan_ref(states, chunk_decay, init)
+    return ssd_scan_pallas(states, chunk_decay, init, interpret=(mode != "pallas"))

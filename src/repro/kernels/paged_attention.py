@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: decode attention through FLIC page tables.
+
+The serving-side centerpiece (DESIGN.md §3): KV lives in fixed-size pages
+managed by the FLIC cache; decode gathers a sequence's pages via its page
+table and runs online-softmax (flash) attention over them.
+
+TPU mapping — this is where the paper's GPU-ish "pointer chase" is rethought
+for the TPU memory system:
+  * the page table and sequence lengths ride in **scalar prefetch** (SMEM),
+    so the ``k_pages``/``v_pages`` BlockSpec ``index_map`` can *redirect the
+    HBM->VMEM DMA* of the next grid step to the right page — the gather
+    happens in the DMA engine, not as a compute-side gather;
+  * grid = (batch, kv_head, num_pages); the (m, l, acc) online-softmax
+    carry lives in VMEM scratch and survives along the last (page) axis;
+  * per-page compute is one (G x page) MXU matmul + VPU softmax update,
+    with G = query heads per KV head (GQA grouping).
+
+Pages whose index exceeds the sequence's page count are masked (their DMA
+reads page-table entry 0 — a resident dummy page — so no OOB traffic).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+    page = k_ref.shape[1]
+    g = q_ref.shape[2]
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (page, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, page)
+
+    length = len_ref[b]
+    pos = p * page + jax.lax.iota(jnp.int32, page)
+    live = pos < length
+    s = jnp.where(live[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]                                  # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    pexp = jnp.exp(s - m_new)                            # (G, page)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(pexp, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        pexp, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-37)).astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_pallas(
+    q: jax.Array,           # (B, Hkv, G, D)
+    k_pages: jax.Array,     # (P, page, Hkv, D)
+    v_pages: jax.Array,     # (P, page, Hkv, D)
+    page_table: jax.Array,  # (B, max_pages) int32
+    lengths: jax.Array,     # (B,) int32
+    interpret: bool = True,
+):
+    b, hkv, g, d = q.shape
+    page = k_pages.shape[1]
+    max_pages = page_table.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bb, h, p, tbl, ln: (bb, h, 0, 0)),
+            pl.BlockSpec(
+                (1, page, 1, d), lambda bb, h, p, tbl, ln: (tbl[bb, p], 0, h, 0)
+            ),
+            pl.BlockSpec(
+                (1, page, 1, d), lambda bb, h, p, tbl, ln: (tbl[bb, p], 0, h, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bb, h, p, tbl, ln: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, q, k_pages, v_pages)

@@ -1,0 +1,115 @@
+"""Pure-jnp oracles for every Pallas kernel (the source of truth in tests).
+
+Each function mirrors its kernel's semantics exactly; the test suite sweeps
+shapes/dtypes and asserts allclose between kernel (interpret mode on CPU)
+and these references.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# flic_lookup: set-associative probe of one cache shard
+# ---------------------------------------------------------------------------
+
+def flic_lookup_ref(
+    tags: jax.Array,     # (S, W) int32 (bitcast uint32 keys)
+    data_ts: jax.Array,  # (S, W) int32
+    valid: jax.Array,    # (S, W) bool
+    data: jax.Array,     # (S, W, D) f32
+    keys: jax.Array,     # (Q,) int32
+    sidx: jax.Array,     # (Q,) int32 precomputed set index
+):
+    """Returns (hit (Q,), ts (Q,), payload (Q,D)). Max-ts way wins (soft
+    coherence tie-break; duplicates of a key within a set are legal)."""
+    row_tags = tags[sidx]                      # (Q, W)
+    row_valid = valid[sidx]
+    row_ts = data_ts[sidx]
+    match = row_valid & (row_tags == keys[:, None])
+    hit = jnp.any(match, axis=1)
+    ts_m = jnp.where(match, row_ts, -1)
+    way = jnp.argmax(ts_m, axis=1)             # max-ts among matches
+    ts = jnp.max(ts_m, axis=1)
+    payload = jnp.take_along_axis(
+        data[sidx], way[:, None, None], axis=1
+    )[:, 0]
+    payload = jnp.where(hit[:, None], payload, 0)
+    return hit, ts, payload
+
+
+# ---------------------------------------------------------------------------
+# flic_merge: soft-coherence merge of two aligned cache shards
+# ---------------------------------------------------------------------------
+
+def flic_merge_ref(
+    tags_a, ts_a, valid_a, data_a,
+    tags_b, ts_b, valid_b, data_b,
+):
+    """Line-wise newest-timestamp-wins merge (paper §I.A.a).
+
+    Replica B's line replaces A's when B is valid and (A invalid or B newer).
+    Returns (tags, ts, valid, data).
+    """
+    take_b = valid_b & (~valid_a | (ts_b > ts_a))
+    tags = jnp.where(take_b, tags_b, tags_a)
+    ts = jnp.where(take_b, ts_b, ts_a)
+    valid = valid_a | valid_b
+    data = jnp.where(take_b[..., None], data_b, data_a)
+    return tags, ts, valid, data
+
+
+# ---------------------------------------------------------------------------
+# paged_attention: decode attention through a FLIC page table
+# ---------------------------------------------------------------------------
+
+def paged_attention_ref(
+    q: jax.Array,           # (B, Hkv, G, D)
+    k_pages: jax.Array,     # (P, page, Hkv, D)
+    v_pages: jax.Array,     # (P, page, Hkv, D)
+    page_table: jax.Array,  # (B, max_pages) int32
+    lengths: jax.Array,     # (B,) int32
+):
+    b, hkv, g, d = q.shape
+    page = k_pages.shape[1]
+    max_pages = page_table.shape[1]
+
+    k = k_pages[page_table]                    # (B, max_pages, page, Hkv, D)
+    v = v_pages[page_table]
+    k = k.reshape(b, max_pages * page, hkv, d)
+    v = v.reshape(b, max_pages * page, hkv, d)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    mask = jnp.arange(max_pages * page)[None] < lengths[:, None]
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan: Mamba2 inter-chunk state recurrence (exclusive scan)
+# ---------------------------------------------------------------------------
+
+def ssd_scan_ref(
+    states: jax.Array,       # (B, C, H, P, N) chunk-local states
+    chunk_decay: jax.Array,  # (B, C, H) exp(sum of chunk's decay increments)
+    init: jax.Array | None = None,  # (B, H, P, N)
+):
+    """Returns (prev_states (B,C,H,P,N), final (B,H,P,N)):
+    prev[c] = state entering chunk c;  S_c = decay_c * S_{c-1} + states_c."""
+    b, c, h, p, n = states.shape
+    s0 = jnp.zeros((b, h, p, n), jnp.float32) if init is None else init.astype(jnp.float32)
+
+    def step(carry, inp):
+        dec, st = inp
+        new = dec[:, :, None, None] * carry + st
+        return new, carry
+
+    final, prev = jax.lax.scan(
+        step, s0,
+        (chunk_decay.swapaxes(0, 1).astype(jnp.float32),
+         states.swapaxes(0, 1).astype(jnp.float32)),
+    )
+    return prev.swapaxes(0, 1), final

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: Mamba2/SSD inter-chunk state recurrence.
+
+The SSD algorithm's only sequential dependency is the chunk-to-chunk state
+pass: ``S_c = decay_c * S_{c-1} + states_c`` (everything else in
+``repro.models.ssm`` is batched matmuls).  This kernel runs that recurrence
+with the running state held in VMEM scratch across grid steps, emitting the
+*entering* state per chunk (exclusive scan) for the off-diagonal term.
+
+TPU mapping: grid = (batch, chunks) with chunks minor, so the (H, P*N)
+state tile stays VMEM-resident for a whole sequence; each step is one fused
+VPU multiply-add over the (H, P, N) tile while the next chunk's local state
+streams in.  Head dim folds into the tile (H*P*N f32 <= ~4 MB for all
+assigned configs).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(states_ref, decay_ref, init_ref, prev_ref, final_ref, carry):
+    c = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _init():
+        carry[...] = init_ref[0].astype(jnp.float32)
+
+    entering = carry[...]                                  # (H, P, N)
+    prev_ref[0, 0] = entering.astype(prev_ref.dtype)
+    dec = decay_ref[0, 0].astype(jnp.float32)              # (H,)
+    st = states_ref[0, 0].astype(jnp.float32)              # (H, P, N)
+    carry[...] = dec[:, None, None] * entering + st
+
+    @pl.when(c == n_chunks - 1)
+    def _emit():
+        final_ref[0] = carry[...].astype(final_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan_pallas(
+    states: jax.Array,       # (B, C, H, P, N)
+    chunk_decay: jax.Array,  # (B, C, H)
+    init: jax.Array | None = None,  # (B, H, P, N)
+    interpret: bool = True,
+):
+    b, c, h, p, n = states.shape
+    if init is None:
+        init = jnp.zeros((b, h, p, n), jnp.float32)
+
+    prev, final = pl.pallas_call(
+        _kernel,
+        grid=(b, c),
+        in_specs=[
+            pl.BlockSpec((1, 1, h, p, n), lambda bb, cc: (bb, cc, 0, 0, 0)),
+            pl.BlockSpec((1, 1, h), lambda bb, cc: (bb, cc, 0)),
+            pl.BlockSpec((1, h, p, n), lambda bb, cc: (bb, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, h, p, n), lambda bb, cc: (bb, cc, 0, 0, 0)),
+            pl.BlockSpec((1, h, p, n), lambda bb, cc: (bb, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, c, h, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(states, chunk_decay, init)
+    return prev, final

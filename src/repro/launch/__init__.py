@@ -1,0 +1,1 @@
+"""Launch: production meshes, AOT dry-run, train/serve drivers."""

@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod AOT dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod);
+  2. resolves shardings from the logical-axis plan (repro.shard.partition);
+  3. ``jax.jit(step).lower(*ShapeDtypeStructs).compile()`` — no allocation;
+  4. records ``memory_analysis()`` (bytes/device), ``cost_analysis()``
+     (FLOPs, bytes), and collective bytes parsed from the partitioned HLO;
+  5. writes one JSON per cell under ``results/dryrun`` (resumable).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite_8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax  # noqa: E402  (must come after XLA_FLAGS)
+
+from repro.config import ARCH_IDS, SHAPES, cells_for, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.shard.partition import PLANS, use_rules
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s4|s8|s16|s32|s64|u4|u8|u16|u32|u64|c64|c128)\[([0-9,]*)\]")
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective family (result-buffer bytes)."""
+    out = {op: 0 for op in _COLL_OPS}
+    counts = {op: 0 for op in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for op in _COLL_OPS:
+            # match "<op>(" and "<op>-start(" but not "<op>-done("
+            if f" {op}(" in stripped or f" {op}-start(" in stripped:
+                lhs = stripped.split("=", 1)[0] if "=" in stripped else ""
+                rhs_head = stripped.split("=", 1)[1] if "=" in stripped else stripped
+                # result shapes appear between '=' and the op name
+                head = rhs_head.split(op)[0]
+                b = sum(_shape_bytes(m) for m in _SHAPE_RE.finditer(head))
+                out[op] += b
+                counts[op] += 1
+                del lhs
+                break
+    out_total = sum(out.values())
+    return {"by_op": out, "counts": counts, "total_bytes": out_total}
+
+
+def run_cell(arch_id: str, shape_id: str, multi_pod: bool, out_dir: str,
+             force: bool = False, plan: str | None = None) -> dict:
+    tag = f"{arch_id}.{shape_id}.{'pod2' if multi_pod else 'pod1'}"
+    if plan:
+        tag += f".{plan}"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_id]
+    rec = {"cell": tag, "arch": arch_id, "shape": shape_id,
+           "multi_pod": multi_pod, "status": "error"}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cell = build_cell(cfg, shape, mesh, plan=plan)
+        with mesh, use_rules(mesh, PLANS[plan] if plan else cell.meta["plan"]):
+            jitted = jax.jit(
+                cell.fn,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate_argnums,
+            )
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        coll = parse_collective_bytes(hlo)
+        n_dev = mesh.size
+        with open(os.path.join(out_dir, tag + ".hlo.txt"), "w") as f:
+            f.write(hlo)  # consumed by repro.analysis (loop-corrected parse)
+
+        mem_rec = {}
+        for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "temp_size_in_bytes", "peak_memory_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_rec[k] = int(v)
+        cost_rec = {k: float(v) for k, v in (cost or {}).items()
+                    if isinstance(v, (int, float)) and (
+                        "flops" in k or "bytes" in k or k in ("transcendentals",))}
+
+        rec.update(
+            status="ok",
+            plan=cell.meta["plan"] if isinstance(cell.meta["plan"], str) else cell.meta["plan"],
+            mesh=cell.meta["mesh"],
+            n_devices=n_dev,
+            lower_s=round(t_lower - t0, 2),
+            compile_s=round(t_compile - t_lower, 2),
+            memory=mem_rec,
+            cost=cost_rec,
+            collectives=coll,
+            hlo_bytes=len(hlo),
+        )
+        # memory_analysis/cost_analysis printed per the spec:
+        print(f"[{tag}] memory_analysis: {mem_rec}")
+        flops = cost_rec.get("flops")
+        print(f"[{tag}] cost_analysis: flops={flops} "
+              f"bytes={cost_rec.get('bytes accessed')} "
+              f"coll={coll['total_bytes']/1e9:.3f} GB")
+    except Exception as e:  # record failures as bugs-to-fix, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[{tag}] FAILED: {rec['error']}")
+    rec["wall_s"] = round(time.time() - t0, 2)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--plan", default=None, help="override parallelism plan")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        for aid in ARCH_IDS:
+            for sid in cells_for(get_arch(aid)):
+                cells.append((aid, sid, False))
+                if args.both_meshes:
+                    cells.append((aid, sid, True))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    ok = failed = 0
+    for aid, sid, mp in cells:
+        rec = run_cell(aid, sid, mp, args.out, args.force, args.plan)
+        ok += rec["status"] == "ok"
+        failed += rec["status"] != "ok"
+    print(f"dry-run complete: {ok} ok, {failed} failed")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,208 @@
+"""AOT input specs + sharding resolution for every (arch x shape) cell.
+
+``build_cell(arch, shape, mesh, plan)`` returns everything the dry-run needs:
+the step function, ShapeDtypeStruct arguments, and in/out shardings — with
+divisibility-aware sharding (a mesh axis that does not divide a dim is
+dropped for that dim, e.g. granite-3's vocab 49155 or phi3's 10 kv heads).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models.model import (
+    decode_cache_specs,
+    decode_step,
+    model_axes,
+    model_param_defs,
+    prefill,
+)
+from repro.models.params import abstract_params
+from repro.optim.adamw import AdamWState
+from repro.shard.partition import PLANS, Plan, axes_to_pspec
+from repro.train.train_step import TrainHyper, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# Divisibility-aware sharding resolution
+# ---------------------------------------------------------------------------
+
+def _fit_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes that do not evenly divide their dim."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        keep = []
+        d = dim
+        for a in axes:
+            size = mesh.shape[a]
+            if d % size == 0:
+                keep.append(a)
+                d //= size
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def resolve_shardings(axes_tree, struct_tree, mesh: Mesh, plan: Plan):
+    """(logical axes tree, ShapeDtypeStruct tree) -> NamedSharding tree."""
+
+    def one(axes, struct):
+        spec = axes_to_pspec(axes, mesh, plan)
+        spec = _fit_spec(spec, struct.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(
+        one, axes_tree, struct_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, with_labels: bool):
+    b, s = shape.global_batch, shape.seq_len
+    structs: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    text = s
+    if cfg.family == "vlm":
+        text = s - cfg.frontend_seq
+        structs["patches"] = jax.ShapeDtypeStruct((b, cfg.frontend_seq, cfg.d_model), jnp.bfloat16)
+        axes["patches"] = ("batch", "seq", "embed")
+    if cfg.family == "encdec":
+        structs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        axes["frames"] = ("batch", "seq", "embed")
+    structs["tokens"] = jax.ShapeDtypeStruct((b, text), jnp.int32)
+    axes["tokens"] = ("batch", "seq")
+    if with_labels:
+        structs["labels"] = jax.ShapeDtypeStruct((b, text), jnp.int32)
+        axes["labels"] = ("batch", "seq")
+    return structs, axes
+
+
+# ---------------------------------------------------------------------------
+# Cell builder
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    fn: Any
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    meta: dict
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    plan: Optional[Plan | str] = None,
+    hyper: Optional[TrainHyper] = None,
+) -> Cell:
+    if plan is None:
+        plan = {"train": "train", "prefill": "prefill", "decode": "decode"}[shape.kind]
+        if shape.name == "long_500k":
+            plan = "long"
+    if isinstance(plan, str):
+        plan = PLANS[plan]
+
+    defs = model_param_defs(cfg)
+    p_struct = abstract_params(defs)
+    p_axes = model_axes(cfg)
+    p_shard = resolve_shardings(p_axes, p_struct, mesh, plan)
+    meta = {
+        "arch": cfg.name, "shape": shape.name, "plan": plan.name,
+        "mesh": dict(zip(mesh.axis_names, np.asarray(mesh.devices.shape).tolist())),
+    }
+
+    if shape.kind == "train":
+        # Default: 8 gradient-accumulation microbatches — keeps per-device
+        # saved residuals ~2 sequences/layer, the knob the §Perf log tunes.
+        # ZeRO-3 plans run mb=1 (1 seq/device already; re-gathering params
+        # per microbatch would multiply the all-gather bytes).
+        mb = 1 if plan.has("mb1") else (4 if plan.has("mb4") else 8)
+        hyper = hyper or TrainHyper(
+            microbatches=mb,
+            remat_policy="nothing" if plan.has("mb1") or plan.has("mb4") else "dots",
+        )
+        step_fn = make_train_step(cfg, hyper)
+        opt_struct = AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            mu=jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), p_struct),
+            nu=jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), p_struct),
+        )
+        opt_shard = AdamWState(
+            step=replicated(mesh),
+            mu=jax.tree.map(lambda x: x, p_shard),
+            nu=jax.tree.map(lambda x: x, p_shard),
+        )
+        b_struct, b_axes = batch_specs(cfg, shape, with_labels=True)
+        b_shard = resolve_shardings(b_axes, b_struct, mesh, plan)
+        step_struct = jax.ShapeDtypeStruct((), jnp.int32)
+        return Cell(
+            fn=step_fn,
+            args=(p_struct, opt_struct, b_struct, step_struct),
+            in_shardings=(p_shard, opt_shard, b_shard, replicated(mesh)),
+            out_shardings=(p_shard, opt_shard, None),
+            donate_argnums=(0, 1),
+            meta=meta,
+        )
+
+    if shape.kind == "prefill":
+        b_struct, b_axes = batch_specs(cfg, shape, with_labels=False)
+        b_shard = resolve_shardings(b_axes, b_struct, mesh, plan)
+
+        def prefill_step(params, batch):
+            return prefill(params, cfg, batch)
+
+        return Cell(
+            fn=prefill_step,
+            args=(p_struct, b_struct),
+            in_shardings=(p_shard, b_shard),
+            out_shardings=None,
+            donate_argnums=(),
+            meta=meta,
+        )
+
+    # decode
+    b, s = shape.global_batch, shape.seq_len
+    enc_seq = cfg.frontend_seq if cfg.family == "encdec" else 0
+    c_struct, c_axes = decode_cache_specs(
+        cfg, b, s, enc_seq, kv_int8=plan.has("kv_int8")
+    )
+    c_shard = [
+        resolve_shardings(a, st, mesh, plan) for a, st in zip(c_axes, c_struct)
+    ]
+    tok_struct = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos_struct = jax.ShapeDtypeStruct((b,), jnp.int32)
+    bspec = _fit_spec(axes_to_pspec(("batch", None), mesh, plan), (b, 1), mesh)
+    tok_shard = NamedSharding(mesh, bspec)
+    pos_shard = NamedSharding(mesh, P(bspec[0]))
+
+    def serve_step(params, token, pos, caches):
+        return decode_step(params, cfg, token, pos, caches)
+
+    return Cell(
+        fn=serve_step,
+        args=(p_struct, tok_struct, pos_struct, c_struct),
+        in_shardings=(p_shard, tok_shard, pos_shard, c_shard),
+        out_shardings=(None, c_shard),
+        donate_argnums=(3,),
+        meta=meta,
+    )

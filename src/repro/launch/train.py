@@ -1,0 +1,68 @@
+"""End-to-end training driver.
+
+On a pod this runs under ``jax.distributed.initialize`` with the production
+mesh; on this container it trains a reduced config on CPU.  Either way the
+code path is identical: config -> mesh/plan -> Trainer (checkpoint/restart,
+fault hooks, metrics).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite_8b \
+        [--smoke] [--steps 100] [--seq 256] [--batch 8] [key=value ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.config import get_arch, get_smoke_arch, parse_overrides
+from repro.train import Trainer, TrainerConfig, TrainHyper
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite_8b")
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("overrides", nargs="*")
+    args = ap.parse_args()
+
+    cfg = get_smoke_arch(args.arch) if args.smoke else get_arch(args.arch)
+    over = parse_overrides(args.overrides)
+    if over:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **over)
+
+    tcfg = TrainerConfig(
+        steps=args.steps,
+        seq_len=args.seq,
+        global_batch=args.batch,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        hyper=TrainHyper(
+            peak_lr=args.lr,
+            warmup_steps=max(args.steps // 10, 1),
+            total_steps=args.steps,
+            microbatches=args.microbatches,
+        ),
+    )
+    trainer = Trainer(cfg, tcfg)
+    history = trainer.run()
+    first = sum(h["loss"] for h in history[:5]) / max(len(history[:5]), 1)
+    last = sum(h["loss"] for h in history[-5:]) / max(len(history[-5:]), 1)
+    print(json.dumps({
+        "arch": cfg.name, "steps": trainer.step,
+        "first_loss": round(first, 4), "last_loss": round(last, 4),
+        "mean_step_s": round(sum(h["step_time_s"] for h in history) / len(history), 4),
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,354 @@
+"""Attention: GQA (with bias / qk-norm variants) and MLA (DeepSeek-V2).
+
+Three execution paths:
+  * ``full``  — materialized scores; short sequences (<= flash threshold).
+  * ``flash`` — pure-JAX online-softmax over (q-block x kv-block) lax.scan;
+    memory O(block^2), used for prefill_32k / train_4k+.  (The Pallas TPU
+    kernel in ``repro.kernels`` mirrors this algorithm for the decode path
+    against FLIC pages; XLA's own fusion handles the training path well.)
+  * ``decode`` — single-token query against a KV cache (contiguous or FLIC
+    paged).  With GSPMD, a kv_seq-sharded cache turns the softmax into a
+    partial-softmax + all-reduce automatically.
+
+KV caches here are *contiguous* (dense (B, S, Hkv, Dh) arrays).  The FLIC
+paged variant lives in ``repro.serving.kv_cache`` and resolves page tables
+before calling ``decode_attention`` on gathered pages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import apply_rope, f32, rmsnorm, rmsnorm_defs
+from repro.models.params import ParamDef
+from repro.shard import shard_act
+
+FLASH_THRESHOLD = 1024
+Q_BLOCK = 512
+KV_BLOCK = 1024
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA parameter defs
+# ---------------------------------------------------------------------------
+
+def gqa_defs(cfg: ModelConfig, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    d = {
+        "w_q": ParamDef((cfg.d_model, cfg.num_heads, hd), ("embed_in", "heads", "head_dim"), dtype=dtype),
+        "w_k": ParamDef((cfg.d_model, cfg.num_kv_heads, hd), ("embed_in", "kv_heads", "head_dim"), dtype=dtype),
+        "w_v": ParamDef((cfg.d_model, cfg.num_kv_heads, hd), ("embed_in", "kv_heads", "head_dim"), dtype=dtype),
+        "w_o": ParamDef((cfg.num_heads, hd, cfg.d_model), ("heads_in", "head_dim", "embed_out"), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        d["b_q"] = ParamDef((cfg.num_heads, hd), ("heads", "head_dim"), init="zeros", dtype=dtype)
+        d["b_k"] = ParamDef((cfg.num_kv_heads, hd), ("kv_heads", "head_dim"), init="zeros", dtype=dtype)
+        d["b_v"] = ParamDef((cfg.num_kv_heads, hd), ("kv_heads", "head_dim"), init="zeros", dtype=dtype)
+    if cfg.use_qk_norm:
+        d["q_norm"] = rmsnorm_defs(hd, dtype)
+        d["k_norm"] = rmsnorm_defs(hd, dtype)
+    return d
+
+
+def _kv_expansion(cfg: ModelConfig) -> int:
+    """KV-head replication factor for TP alignment (plan flag 'kv_expand').
+
+    When kv_heads doesn't divide the TP axis but a small replication factor
+    r makes (kv_heads*r) % tp == 0 (and still divides num_heads), replicate
+    KV r-fold so q AND k/v shard over the same head partition — removing the
+    cross-shard all-reduces XLA otherwise inserts inside attention loops
+    (EXPERIMENTS.md §Perf).  Returns 1 when inapplicable.
+    """
+    from repro.shard.partition import current_rules
+
+    mesh, plan = current_rules()
+    if mesh is None or plan is None or not plan.has("kv_expand"):
+        return 1
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    hkv, hq = cfg.num_kv_heads, cfg.num_heads
+    if hkv % tp == 0 or hq % tp != 0:
+        return 1
+    for r in (2, 4, 8, 16):
+        if hq % (hkv * r) == 0 and (hkv * r) % tp == 0:
+            return r
+    return 1
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["w_v"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    if cfg.use_qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    r = _kv_expansion(cfg)
+    if r > 1:
+        k = jnp.repeat(k, r, axis=2)
+        v = jnp.repeat(v, r, axis=2)
+    q = shard_act(q, "batch", "seq", "act_heads", None)
+    k = shard_act(k, "batch", "seq", "act_heads", None)
+    v = shard_act(v, "batch", "seq", "act_heads", None)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Score paths
+# ---------------------------------------------------------------------------
+
+def _grouped(q: jax.Array, hkv: int) -> jax.Array:
+    """(B,S,Hq,D) -> (B,S,Hkv,G,D)."""
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, hkv, hq // hkv, d)
+
+
+def full_attention(q, k, v, causal: bool, q_offset: int = 0) -> jax.Array:
+    """Materialized-score attention. q:(B,Sq,Hq,D) k/v:(B,Skv,Hkv,D)."""
+    hkv = k.shape[2]
+    qg = _grouped(q, hkv)
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", f32(qg), f32(k)) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq) + q_offset
+        mask = qpos[:, None] >= jnp.arange(sk)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v)
+    b, sq, hkv_, g, d = out.shape
+    return out.reshape(b, sq, hkv_ * g, d)
+
+
+def flash_attention(q, k, v, causal: bool) -> jax.Array:
+    """Online-softmax attention, O(block²) memory, pure JAX (lax.scan²).
+
+    Shapes as full_attention.  Sequence lengths must divide the block sizes
+    (all assigned shapes do; smoke shapes take the full path).
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    dv = v.shape[-1]  # may differ from d (MLA: q/k 192, v 128)
+    g = hq // hkv
+    qb = min(Q_BLOCK, sq)
+    kb = min(KV_BLOCK, skv)
+    nq, nk = sq // qb, skv // kb
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    qg = _grouped(q, hkv).reshape(b, nq, qb, hkv, g, d)
+    kr = k.reshape(b, nk, kb, hkv, d)
+    vr = v.reshape(b, nk, kb, hkv, dv)
+
+    def q_block(qi, q_blk):
+        # q_blk: (b, qb, hkv, g, d)
+        m0 = jnp.full((b, hkv, g, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qb), jnp.float32)
+        acc0 = jnp.zeros((b, qb, hkv, g, dv), jnp.float32)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_index_in_dim(kr, kj, 1, keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(vr, kj, 1, keepdims=False)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", f32(q_blk), f32(k_blk)) * scale
+            if causal:
+                qpos = qi * qb + jnp.arange(qb)
+                kpos = kj * kb + jnp.arange(kb)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bqhgd", p, f32(v_blk)
+            )
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, acc0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-37).transpose(0, 3, 1, 2)[..., None]
+        return out.astype(q.dtype)
+
+    outs = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qg.swapaxes(0, 1)))
+    # outs: (nq, b, qb, hkv, g, dv)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hq, dv)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, kv_len) -> jax.Array:
+    """One-token attention. q:(B,1,Hq,D), caches:(B,S,Hkv,D), kv_len:(B,)."""
+    hkv = k_cache.shape[2]
+    qg = _grouped(q, hkv)                       # (B,1,Hkv,G,D)
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", f32(qg), f32(k_cache)) * scale
+    mask = jnp.arange(k_cache.shape[1])[None] < kv_len[:, None]   # (B,S)
+    s = jnp.where(mask[:, None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, f32(v_cache)).astype(q.dtype)
+    b, one, h, g, d = out.shape
+    return out.reshape(b, one, h * g, d)
+
+
+# ---------------------------------------------------------------------------
+# GQA block entry points
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KVUpdate:
+    """New K/V rows produced by a forward pass (for cache append)."""
+    k: jax.Array
+    v: jax.Array
+
+
+def gqa_forward(
+    p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+    causal: bool = True,
+) -> tuple[jax.Array, KVUpdate]:
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    seq = x.shape[1]
+    if seq > FLASH_THRESHOLD:
+        out = flash_attention(q, k, v, causal)
+    else:
+        out = full_attention(q, k, v, causal)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+    return shard_act(y, "batch", "seq", "embed"), KVUpdate(k=k, v=v)
+
+
+def quantize_kv_row(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-(token, head) symmetric int8 for a K/V row (..., Hkv, D).
+
+    FLIC page compression (paper §II-C: "FLIC adds another layer on top of
+    compression"): pages store int8 payloads + one f32 scale per head-row,
+    halving cache HBM bytes vs bf16 — the decode memory-roofline term.
+    """
+    absmax = jnp.maximum(jnp.max(jnp.abs(f32(x)), axis=-1, keepdims=True), 1e-8)
+    scale = absmax / 127.0
+    q = jnp.clip(jnp.round(f32(x) / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0].astype(jnp.float32)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def gqa_decode(
+    p: dict, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+    k_cache: jax.Array, v_cache: jax.Array,
+    k_scale: jax.Array | None = None, v_scale: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array | None, jax.Array | None]:
+    """One decode step. x: (B,1,d); pos: (B,) write position (= current len).
+
+    Scatters the new K/V row at ``pos`` and attends over ``pos+1`` entries.
+    int8 caches (scales given) are dequantized on the fly.
+    Returns (y, k_cache, v_cache, k_scale, v_scale).
+    """
+    q, k, v = _project_qkv(p, cfg, x, pos[:, None])
+    bidx = jnp.arange(x.shape[0])
+    if k_cache.dtype == jnp.int8:
+        kq, ks = quantize_kv_row(k[:, 0])
+        vq, vs = quantize_kv_row(v[:, 0])
+        k_cache = k_cache.at[bidx, pos].set(kq)
+        v_cache = v_cache.at[bidx, pos].set(vq)
+        k_scale = k_scale.at[bidx, pos].set(ks)
+        v_scale = v_scale.at[bidx, pos].set(vs)
+        k_full = dequantize_kv(k_cache, k_scale)
+        v_full = dequantize_kv(v_cache, v_scale)
+    else:
+        k_cache = k_cache.at[bidx, pos].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[bidx, pos].set(v[:, 0].astype(v_cache.dtype))
+        k_full, v_full = k_cache, v_cache
+    out = decode_attention(q, k_full, v_full, pos + 1)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+    return shard_act(y, "batch", "seq", "embed"), k_cache, v_cache, k_scale, v_scale
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): compressed-latent KV
+# ---------------------------------------------------------------------------
+
+def mla_defs(cfg: ModelConfig, dtype) -> dict:
+    h, dn, dr, dv = cfg.num_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    return {
+        "w_q": ParamDef((cfg.d_model, h, dn + dr), ("embed_in", "heads", "head_dim"), dtype=dtype),
+        "w_dkv": ParamDef((cfg.d_model, r), ("embed_in", "lora"), dtype=dtype),
+        "kv_norm": rmsnorm_defs(r, dtype),
+        "w_uk": ParamDef((r, h, dn), ("lora", "heads", "head_dim"), dtype=dtype),
+        "w_uv": ParamDef((r, h, dv), ("lora", "heads", "head_dim"), dtype=dtype),
+        "w_kr": ParamDef((cfg.d_model, dr), ("embed_in", "head_dim"), dtype=dtype),
+        "w_o": ParamDef((h, dv, cfg.d_model), ("heads_in", "head_dim", "embed_out"), dtype=dtype),
+    }
+
+
+def mla_forward(
+    p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Training/prefill MLA. Returns (y, latent_cache (B,S,r+dr))."""
+    h, dn, dr = cfg.num_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = rmsnorm(p["kv_norm"], x @ p["w_dkv"], cfg.norm_eps)     # (B,S,r)
+    k_rope = apply_rope((x @ p["w_kr"])[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (*k_nope.shape[:3], dr))], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    seq = x.shape[1]
+    if seq > FLASH_THRESHOLD:
+        out = flash_attention(qf, k, v, causal=True)
+    else:
+        out = full_attention(qf, k, v, causal=True)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+    latent = jnp.concatenate([c_kv, k_rope], axis=-1)              # (B,S,r+dr)
+    return shard_act(y, "batch", "seq", "embed"), latent
+
+
+def mla_decode(
+    p: dict, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+    latent_cache: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Absorbed-weight MLA decode against the compressed latent cache.
+
+    latent_cache: (B, S, r+dr) — per-position [c_kv | k_rope].  This is the
+    paper-technique-relevant path: FLIC pages store *latents*, an ~8x byte
+    reduction vs materialized GQA KV (DESIGN.md §6).  The fresh latent row is
+    scattered at ``pos`` before attending; returns (y, updated_cache).
+    """
+    h, dn, dr = cfg.num_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    r = cfg.kv_lora_rank
+    # fresh latent row, scattered first so the token attends to itself
+    c_new = rmsnorm(p["kv_norm"], x @ p["w_dkv"], cfg.norm_eps)
+    kr_new = apply_rope((x @ p["w_kr"])[:, :, None, :], pos[:, None], cfg.rope_theta)[:, :, 0]
+    new_row = jnp.concatenate([c_new, kr_new], axis=-1)           # (B,1,r+dr)
+    bidx = jnp.arange(x.shape[0])
+    latent_cache = latent_cache.at[bidx, pos].set(new_row[:, 0].astype(latent_cache.dtype))
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])                  # (B,1,h,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+    # absorb W_uk: query in latent space
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])       # (B,1,h,r)
+
+    c_kv, k_rope = latent_cache[..., :r], latent_cache[..., r:]
+    scale = 1.0 / jnp.sqrt(dn + dr).astype(jnp.float32)
+    s = (
+        jnp.einsum("bshr,bkr->bshk", f32(q_lat), f32(c_kv))
+        + jnp.einsum("bshd,bkd->bshk", f32(q_rope), f32(k_rope))
+    ) * scale                                                      # (B,1,h,S)
+    mask = jnp.arange(latent_cache.shape[1])[None] <= pos[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bshk,bkr->bshr", w, f32(c_kv))            # (B,1,h,r)
+    out = jnp.einsum("bshr,rhk->bshk", o_lat, f32(p["w_uv"])).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+    return shard_act(y, "batch", "seq", "embed"), latent_cache

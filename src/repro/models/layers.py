@@ -1,0 +1,111 @@
+"""Core layers: RMSNorm, RoPE, SwiGLU MLP, embeddings.
+
+Pure functions over ParamDef-described weight dicts.  Activation sharding is
+expressed with logical axes via ``repro.shard.shard_act`` (no-op on CPU tests,
+binding under a (mesh, plan) context in the dry-run / launchers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.params import ParamDef
+from repro.shard import shard_act
+
+
+def f32(x):
+    return x.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_defs(dim: int, dtype) -> dict:
+    return {"scale": ParamDef((dim,), ("null",), init="ones", dtype=dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float) -> jax.Array:
+    var = jnp.mean(jnp.square(f32(x)), axis=-1, keepdims=True)
+    y = f32(x) * jax.lax.rsqrt(var + eps)
+    return (y * f32(p["scale"])).astype(x.dtype)
+
+
+def gated_rmsnorm(p: dict, x: jax.Array, gate: jax.Array, eps: float) -> jax.Array:
+    """Mamba2's norm: RMSNorm(x * silu(gate))."""
+    x = f32(x) * jax.nn.silu(f32(gate))
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * f32(p["scale"])).astype(gate.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (half-rotation / llama convention)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                          # (d/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, d/2)
+    cos = jnp.cos(ang)[..., :, None, :]                   # (..., seq, 1, d/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(f32(x), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_defs(d_model: int, d_ff: int, dtype) -> dict:
+    return {
+        "w_gate": ParamDef((d_model, d_ff), ("embed_in", "ffn_out"), dtype=dtype),
+        "w_up": ParamDef((d_model, d_ff), ("embed_in", "ffn_out"), dtype=dtype),
+        "w_down": ParamDef((d_ff, d_model), ("ffn_in", "embed_out"), dtype=dtype),
+    }
+
+
+def mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard_act(h, "batch", "seq", "act_ffn")
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_defs(cfg: ModelConfig, dtype) -> dict:
+    d = {
+        "tok": ParamDef(
+            (cfg.vocab_size, cfg.d_model), ("vocab", "embed_out"),
+            init="embed", scale=1.0, dtype=dtype,
+        )
+    }
+    if not cfg.tie_embeddings:
+        # the head gets its own logical axes: plans can shard it over vocab
+        # (local logits + tiny logsumexp reductions) independent of the
+        # token table, whose gather prefers an embed-dim sharding.
+        d["head"] = ParamDef(
+            (cfg.d_model, cfg.vocab_size), ("head_embed", "head_vocab"),
+            init="normal", dtype=dtype,
+        )
+    return d
+
+
+def embed_tokens(p: dict, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0)
+    return shard_act(x, "batch", "seq", "embed")
+
+
+def lm_logits(p: dict, x: jax.Array, tie: bool) -> jax.Array:
+    w = p["tok"].T if tie else p["head"]
+    logits = x @ w
+    return shard_act(logits, "batch", "seq", "act_heads")

@@ -1,0 +1,211 @@
+"""Top-level model API: param defs, forward, loss, prefill, decode.
+
+Uniform entry points across all 10 assigned architectures:
+
+  * ``model_param_defs(cfg)``      — ParamDef tree (single source of truth);
+  * ``forward(params, cfg, batch)`` — logits for train/prefill;
+  * ``loss_fn``                    — chunked cross-entropy (+ MoE aux);
+  * ``prefill`` / ``decode_step``  — serving paths with per-layer caches.
+
+Batches (from the data pipeline or ``input_specs``):
+  LM/ssm/hybrid/moe: {tokens (B,S) i32, labels (B,S) i32}
+  vlm:    {tokens (B,S_text), patches (B,P,d_model), labels (B,S_text)}
+  encdec: {frames (B,S_enc,d_model), tokens (B,S), labels (B,S)}
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import (
+    embed_defs,
+    embed_tokens,
+    f32,
+    rmsnorm,
+    rmsnorm_defs,
+)
+from repro.models.params import abstract_params, init_params, logical_axes
+from repro.models.stack import apply_group, cache_specs, group_param_defs, plan_groups
+from repro.shard import shard_act
+
+LOSS_CHUNK = 1024
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def model_param_defs(cfg: ModelConfig) -> dict:
+    dt = _dtype(cfg)
+    enc_groups, dec_groups = plan_groups(cfg)
+    defs: dict[str, Any] = {"embed": embed_defs(cfg, dt)}
+    if enc_groups:
+        defs["enc"] = {f"g{i}": group_param_defs(cfg, g, dt) for i, g in enumerate(enc_groups)}
+        defs["enc_norm"] = rmsnorm_defs(cfg.d_model, dt)
+    defs["dec"] = {f"g{i}": group_param_defs(cfg, g, dt) for i, g in enumerate(dec_groups)}
+    defs["final_norm"] = rmsnorm_defs(cfg.d_model, dt)
+    return defs
+
+
+def init_model(rng: jax.Array, cfg: ModelConfig):
+    return init_params(rng, model_param_defs(cfg))
+
+
+def abstract_model(cfg: ModelConfig):
+    return abstract_params(model_param_defs(cfg))
+
+
+def model_axes(cfg: ModelConfig):
+    return logical_axes(model_param_defs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Encoder (enc-dec archs)
+# ---------------------------------------------------------------------------
+
+def _encode(params, cfg: ModelConfig, frames: jax.Array, remat: bool, remat_policy: str = "dots"):
+    enc_groups, _ = plan_groups(cfg)
+    x = shard_act(frames, "batch", "seq", "embed")
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+    for i, g in enumerate(enc_groups):
+        x, _, _ = apply_group(
+            params["enc"][f"g{i}"], cfg, g, x, pos, "train", remat=remat,
+            remat_policy=remat_policy,
+        )
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _decoder_input(params, cfg: ModelConfig, batch: dict):
+    """Embed tokens (+ modality prefix for VLM). Returns (x, text_offset)."""
+    x = embed_tokens(params["embed"], batch["tokens"])
+    offset = 0
+    if cfg.family == "vlm" and "patches" in batch:
+        patches = batch["patches"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        offset = patches.shape[1]
+    return x, offset
+
+
+def forward(
+    params, cfg: ModelConfig, batch: dict, mode: str = "train",
+    remat: bool = False, remat_policy: str = "dots",
+):
+    """Returns (hidden, aux_loss, caches, text_offset). Caches only in prefill."""
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(params, cfg, batch["frames"], remat, remat_policy)
+    x, offset = _decoder_input(params, cfg, batch)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+    _, dec_groups = plan_groups(cfg)
+    caches = []
+    aux_total = jnp.float32(0.0)
+    for i, g in enumerate(dec_groups):
+        x, c, aux = apply_group(
+            params["dec"][f"g{i}"], cfg, g, x, pos,
+            "prefill" if mode == "prefill" else "train",
+            enc_out=enc_out, remat=remat, remat_policy=remat_policy,
+        )
+        aux_total = aux_total + aux
+        if mode == "prefill":
+            caches.append(c)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux_total, caches if mode == "prefill" else None, offset
+
+
+# ---------------------------------------------------------------------------
+# Loss: chunked cross-entropy (keeps (B,S,V) logits off-HBM)
+# ---------------------------------------------------------------------------
+
+def _lm_head_weight(params, cfg: ModelConfig):
+    emb = params["embed"]
+    return emb["tok"].T if cfg.tie_embeddings else emb["head"]
+
+
+def chunked_ce(
+    params, cfg: ModelConfig, hidden: jax.Array, labels: jax.Array,
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Mean CE over (B,S) labels; logits computed per seq-chunk."""
+    w = _lm_head_weight(params, cfg)
+    b, s, d = hidden.shape
+    chunk = min(LOSS_CHUNK, s)
+    while s % chunk:  # largest divisor of s <= LOSS_CHUNK (handles vlm 3840)
+        chunk -= 1
+    n = s // chunk
+    hs = hidden.reshape(b, n, chunk, d).swapaxes(0, 1)      # (n,B,c,d)
+    ls = labels.reshape(b, n, chunk).swapaxes(0, 1)
+    ms = (
+        jnp.ones((n, b, chunk), jnp.float32)
+        if mask is None else mask.reshape(b, n, chunk).swapaxes(0, 1).astype(jnp.float32)
+    )
+
+    @jax.checkpoint  # recompute chunk logits in backward: (B,c,V) never lives
+    def body(acc, inp):
+        h, lbl, mk = inp
+        logits = f32(h @ w)                                  # (B,c,V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+        ce = (logz - gold) * mk
+        return (acc[0] + jnp.sum(ce), acc[1] + jnp.sum(mk)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, remat: bool = False,
+            remat_policy: str = "dots"):
+    hidden, aux, _, offset = forward(params, cfg, batch, "train", remat, remat_policy)
+    if offset:
+        hidden = hidden[:, offset:]
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    ce = chunked_ce(params, cfg, hidden, labels, mask)
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving paths
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, batch: dict):
+    """Full-prompt forward returning per-group caches + last-position logits."""
+    hidden, _, caches, _ = forward(params, cfg, batch, "prefill")
+    w = _lm_head_weight(params, cfg)
+    logits = f32(hidden[:, -1:] @ w)
+    return logits, caches
+
+
+def decode_step(
+    params, cfg: ModelConfig, token: jax.Array, pos: jax.Array, caches: list,
+):
+    """One token for every sequence in the batch.
+
+    token: (B,1) i32; pos: (B,) current lengths; caches: stacked per group.
+    Returns (logits (B,1,V), new_caches).
+    """
+    x = embed_tokens(params["embed"], token)
+    _, dec_groups = plan_groups(cfg)
+    new_caches = []
+    for i, g in enumerate(dec_groups):
+        x, c, _ = apply_group(
+            params["dec"][f"g{i}"], cfg, g, x, None, "decode",
+            cache=caches[i], kv_len=pos,
+        )
+        new_caches.append(c)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    w = _lm_head_weight(params, cfg)
+    logits = f32(x @ w)
+    return logits, new_caches
+
+
+def decode_cache_specs(cfg: ModelConfig, batch: int, seq: int, enc_seq: int = 0,
+                       kv_int8: bool = False):
+    return cache_specs(cfg, batch, seq, enc_seq, kv_int8)

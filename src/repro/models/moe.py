@@ -1,0 +1,153 @@
+"""Mixture-of-Experts: top-k routing with sort-based capacity dispatch.
+
+Real (non-dense) dispatch: tokens are sorted by assigned expert, packed into
+an (E, C, D) buffer (C = capacity), processed by stacked expert SwiGLUs, and
+combined back with router weights.  Under the ``experts -> model`` sharding
+rule this is expert parallelism: GSPMD turns the pack/unpack into
+all-to-alls along the model axis.
+
+Overflow beyond capacity is dropped (standard capacity-factor semantics);
+the load-balance auxiliary loss (Switch/GShard style) keeps drops rare.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import f32
+from repro.models.params import ParamDef
+from repro.shard import shard_act
+
+
+def moe_defs(cfg: ModelConfig, dtype) -> dict:
+    e, d, fdim = cfg.moe_num_experts, cfg.d_model, cfg.moe_d_ff
+    defs = {
+        "router": ParamDef((d, e), ("embed_in", "experts"), dtype=jnp.float32),
+        "w_gate": ParamDef((e, d, fdim), ("experts", "embed_in", "moe_ffn_out"), dtype=dtype),
+        "w_up": ParamDef((e, d, fdim), ("experts", "embed_in", "moe_ffn_out"), dtype=dtype),
+        "w_down": ParamDef((e, fdim, d), ("experts", "moe_ffn_in", "embed_out"), dtype=dtype),
+    }
+    if cfg.moe_num_shared:
+        s = cfg.moe_num_shared
+        defs["shared"] = {
+            "w_gate": ParamDef((d, s * fdim), ("embed_in", "ffn_out"), dtype=dtype),
+            "w_up": ParamDef((d, s * fdim), ("embed_in", "ffn_out"), dtype=dtype),
+            "w_down": ParamDef((s * fdim, d), ("ffn_in", "embed_out"), dtype=dtype),
+        }
+    return defs
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.moe_top_k * cfg.moe_capacity_factor / cfg.moe_num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def _route(p: dict, cfg: ModelConfig, xt: jax.Array):
+    """Router top-k for (T,D) tokens. Returns (gates (T,K), idx (T,K), aux)."""
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    logits = f32(xt) @ f32(p["router"])                       # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, topk_idx = jax.lax.top_k(probs, k)             # (T,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+    # load-balance aux loss (Switch/GShard), computed before dropping
+    me = jnp.mean(probs, axis=0)
+    one_hot = jax.nn.one_hot(topk_idx, e, dtype=jnp.float32)
+    ce = jnp.mean(jnp.sum(one_hot, axis=1), axis=0) / k
+    aux = e * jnp.sum(me * ce)
+    return gate_vals, topk_idx, aux
+
+
+def _pack_plan(cfg: ModelConfig, gate_vals, topk_idx, t: int, cap: int):
+    """Sort-based dispatch plan for T tokens: (keep, buf_rows, sw, stok)."""
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    flat_e = topk_idx.reshape(-1)
+    flat_w = gate_vals.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, sw, stok = flat_e[order], flat_w[order], flat_tok[order]
+    counts = jnp.bincount(se, length=e)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(t * k) - starts[se]
+    keep = rank < cap
+    buf_rows = jnp.where(keep, se * cap + rank, e * cap)      # OOB drop slot
+    return keep, buf_rows, sw, stok
+
+
+def _pack(xt, keep, buf_rows, stok, e: int, cap: int):
+    d = xt.shape[-1]
+    return (
+        jnp.zeros((e * cap, d), xt.dtype)
+        .at[buf_rows].set(xt[stok], mode="drop")
+        .reshape(e, cap, d)
+    )
+
+
+def _combine(out_buf, keep, buf_rows, sw, stok, t: int):
+    e_cap, d = out_buf.shape[0] * out_buf.shape[1], out_buf.shape[2]
+    flat = out_buf.reshape(e_cap, d)
+    gathered = flat[jnp.where(keep, buf_rows, 0)]
+    contrib = jnp.where(keep[:, None], gathered * sw[:, None].astype(out_buf.dtype), 0)
+    return jnp.zeros((t, d), out_buf.dtype).at[stok].add(contrib)
+
+
+def moe_forward(
+    p: dict, cfg: ModelConfig, x: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B,S,D). Returns (y, aux_loss).
+
+    Dispatch is GROUPED per batch row when S is large (train/prefill): each
+    row routes/sorts independently, so with batch sharded over ``data`` and
+    experts over ``model`` the pack/unpack lowers to an all-to-all instead of
+    a global cross-shard sort.  Decode (S==1) uses one global group.
+    """
+    bsz, s, d = x.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+
+    if s >= e:  # grouped: one dispatch per batch row
+        cap = _capacity(cfg, s)
+        gates, topk_idx, aux = _route(p, cfg, x.reshape(bsz * s, d))
+        gates = gates.reshape(bsz, s, k)
+        topk_idx = topk_idx.reshape(bsz, s, k)
+
+        keep, buf_rows, sw, stok = jax.vmap(
+            lambda g, i: _pack_plan(cfg, g, i, s, cap)
+        )(gates, topk_idx)
+        buf = jax.vmap(lambda xr, ke, br, st: _pack(xr, ke, br, st, e, cap))(
+            x, keep, buf_rows, stok
+        )                                                     # (B,E,cap,D)
+        # moe_b / moe_d are dedicated logical axes: EP-stationary plans put
+        # the token-d contraction on 'data' (expert weights never move; the
+        # partial sums all-reduce activation-sized buffers instead).
+        buf = shard_act(buf, "moe_b", "act_experts", None, "moe_d")
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"])) * jnp.einsum(
+            "becd,edf->becf", buf, p["w_up"]
+        )
+        h = shard_act(h, "moe_b", "act_experts", None, None)
+        out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"])
+        out_buf = shard_act(out_buf, "moe_b", "act_experts", None, "moe_d")
+        y = jax.vmap(lambda ob, ke, br, w, st: _combine(ob, ke, br, w, st, s))(
+            out_buf, keep, buf_rows, sw, stok
+        )                                                     # (B,S,D)
+    else:  # decode: single global group over B*S tokens
+        t = bsz * s
+        xt = x.reshape(t, d)
+        cap = _capacity(cfg, t)
+        gates, topk_idx, aux = _route(p, cfg, xt)
+        keep, buf_rows, sw, stok = _pack_plan(cfg, gates, topk_idx, t, cap)
+        buf = _pack(xt, keep, buf_rows, stok, e, cap)
+        buf = shard_act(buf, "act_experts", None, "moe_d")
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * jnp.einsum(
+            "ecd,edf->ecf", buf, p["w_up"]
+        )
+        out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+        y = _combine(out_buf, keep, buf_rows, sw, stok, t).reshape(bsz, s, d)
+
+    if "shared" in p:
+        sp = p["shared"]
+        hs = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        y = y + hs @ sp["w_down"]
+    return shard_act(y, "batch", "seq", "embed"), aux

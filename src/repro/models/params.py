@@ -1,0 +1,110 @@
+"""Parameter definition system: one source of truth for shapes, logical
+sharding axes, and initializers.
+
+A model is described as a nested dict of ``ParamDef``s.  From that single
+tree we derive:
+  * ``init_params``   — materialized arrays (deterministic per-path PRNG);
+  * ``abstract_params`` — ``ShapeDtypeStruct``s for AOT lowering (dry-run);
+  * ``logical_axes``  — tree of logical-axis tuples, resolved to
+    ``PartitionSpec``s by ``repro.shard.partition`` per parallelism plan.
+
+Logical axis vocabulary (resolved per plan in ``repro.shard.partition``):
+  layers, embed, vocab, heads, kv_heads, head_dim, qkv, ffn, experts,
+  moe_ffn, lora, ssm_inner, ssm_heads, ssm_state, conv, null
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]        # logical axis per dim (None = replicated)
+    init: str = "normal"                   # normal | zeros | ones | embed | scaled
+    scale: float = 1.0                     # extra multiplier on the init std
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+ParamTree = dict  # nested dict[str, ParamDef | ParamTree]
+
+
+def _init_leaf(rng: jax.Array, d: ParamDef) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    # fan-in scaled truncated normal; embeddings scale by 1.0
+    if d.init == "embed":
+        std = d.scale
+    else:
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale / np.sqrt(max(fan_in, 1))
+    x = jax.random.truncated_normal(rng, -2.0, 2.0, d.shape, jnp.float32) * std
+    return x.astype(d.dtype)
+
+
+def _walk(tree: ParamTree, fn: Callable[[str, ParamDef], Any], prefix: str = "") -> dict:
+    out = {}
+    for k, v in tree.items():
+        path = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, ParamDef):
+            out[k] = fn(path, v)
+        else:
+            out[k] = _walk(v, fn, path)
+    return out
+
+
+def init_params(rng: jax.Array, defs: ParamTree) -> dict:
+    """Materialize all parameters. Each leaf gets a path-folded key so the
+    result is independent of dict iteration order."""
+
+    def leaf(path: str, d: ParamDef):
+        h = 0
+        for ch in path.encode():  # deterministic path hash
+            h = (h * 131 + ch) % (2**31)
+        return _init_leaf(jax.random.fold_in(rng, h), d)
+
+    return _walk(defs, leaf)
+
+
+def abstract_params(defs: ParamTree) -> dict:
+    """ShapeDtypeStructs for AOT lowering — no allocation."""
+    return _walk(defs, lambda _, d: jax.ShapeDtypeStruct(d.shape, d.dtype))
+
+
+def logical_axes(defs: ParamTree) -> dict:
+    """Tree of logical-axis tuples, parallel to the params tree."""
+    return _walk(defs, lambda _, d: d.axes)
+
+
+def param_count(defs: ParamTree) -> int:
+    total = 0
+
+    def leaf(_, d: ParamDef):
+        nonlocal total
+        total += int(np.prod(d.shape))
+        return None
+
+    _walk(defs, leaf)
+    return total
+
+
+def stack_defs(defs: ParamTree, n: int, axis_name: str = "layers") -> ParamTree:
+    """Prepend a stacked `layers` dim to every leaf (for scan-over-layers)."""
+
+    def leaf(_, d: ParamDef):
+        return ParamDef(
+            shape=(n, *d.shape), axes=(axis_name, *d.axes),
+            init=d.init, scale=d.scale, dtype=d.dtype,
+        )
+
+    return _walk(defs, leaf)

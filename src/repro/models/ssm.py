@@ -1,0 +1,229 @@
+"""Mamba2 (SSD — state-space duality) blocks: chunked train scan + decode step.
+
+Implements the SSD algorithm of Dao & Gu (2024), arXiv:2405.21060, in pure
+JAX (the Pallas kernel in ``repro.kernels.ssd_scan`` accelerates the chunk
+recurrence on TPU; this module is also its oracle).
+
+Shapes: B batch, S seq, H heads, P headdim, N state, G groups (=1 here),
+Q chunk length.  d_inner = H*P = expand*d_model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import f32, gated_rmsnorm, rmsnorm_defs
+from repro.models.params import ParamDef
+from repro.shard import shard_act
+
+
+def ssm_defs(cfg: ModelConfig, dtype) -> dict:
+    di = cfg.ssm_d_inner
+    h = cfg.ssm_nheads
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    conv_dim = di + 2 * g * n
+    return {
+        # fused in_proj -> [z (di) | xBC (conv_dim) | dt (h)]
+        "w_in": ParamDef((cfg.d_model, 2 * di + 2 * g * n + h), ("embed_in", "ssm_out"), dtype=dtype),
+        "conv_w": ParamDef((cfg.ssm_conv, conv_dim), ("conv", "ssm_out"), dtype=dtype, scale=0.5),
+        "conv_b": ParamDef((conv_dim,), ("ssm_out",), init="zeros", dtype=dtype),
+        "a_log": ParamDef((h,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "d_skip": ParamDef((h,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "norm": rmsnorm_defs(di, dtype),
+        "w_out": ParamDef((di, cfg.d_model), ("ssm_in", "embed_out"), dtype=dtype),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMState:
+    """Decode-time recurrent state for one layer (pytree via jax dataclass)."""
+    conv: jax.Array  # (B, conv_width-1, conv_dim)
+    ssd: jax.Array   # (B, H, P, N)
+
+
+jax.tree_util.register_dataclass(SSMState)
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    di = cfg.ssm_d_inner
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    z = proj[..., :di]
+    x_bc = proj[..., di : di + di + 2 * gn]
+    dt = proj[..., di + di + 2 * gn :]
+    return z, x_bc, dt
+
+
+def _causal_conv(p: dict, x_bc: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq. x_bc: (B,S,C)."""
+    w = f32(p["conv_w"])                        # (K, C)
+    k = w.shape[0]
+    pad = jnp.pad(f32(x_bc), ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : pad.shape[1] - (k - 1 - i), :] * w[i]
+        for i in range(k)
+    )
+    return jax.nn.silu(out + f32(p["conv_b"])).astype(x_bc.dtype)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise cumulative sums: out[i,j] = sum_{j<k<=i} a_k."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,   # (B,S,H,P) pre-scaled inputs
+    dt: jax.Array,  # (B,S,H) softplus'd step sizes
+    a: jax.Array,   # (H,) negative decay rates (A = -exp(a_log))
+    b: jax.Array,   # (B,S,G,N)
+    c: jax.Array,   # (B,S,G,N)
+    chunk: int,
+    init_state: jax.Array | None = None,  # (B,H,P,N)
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s_orig, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    q = min(chunk, s_orig)
+    pad = (-s_orig) % q
+    if pad:  # zero-pad to a chunk multiple: dt=0 rows are exact no-ops
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = s_orig + pad
+    nc = s // q
+
+    # reshape to chunks; broadcast groups to heads (G=1 typical)
+    xr = f32(x).reshape(bsz, nc, q, h, p)
+    dtr = f32(dt).reshape(bsz, nc, q, h)
+    br = jnp.broadcast_to(
+        f32(b).reshape(bsz, nc, q, g, 1, n), (bsz, nc, q, g, h // g, n)
+    ).reshape(bsz, nc, q, h, n)
+    cr = jnp.broadcast_to(
+        f32(c).reshape(bsz, nc, q, g, 1, n), (bsz, nc, q, g, h // g, n)
+    ).reshape(bsz, nc, q, h, n)
+
+    da = dtr * f32(a)[None, None, None, :]            # (B,nc,q,H) decay increments
+    cum = jnp.cumsum(da, axis=2)                      # within-chunk cumsum
+    # intra-chunk (diagonal) term
+    L = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))    # (B,nc,H,q,q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", cr, br) # (B,nc,H,q,k)
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp", scores * L, dtr, xr)
+
+    # chunk-final states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)   # (B,nc,q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqh,bcqhp->bchpn", br, decay_to_end, dtr, xr)
+
+    # inter-chunk recurrence: S_c = exp(sum da_c) S_{c-1} + states_c
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))        # (B,nc,H)
+    s0 = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if init_state is None else f32(init_state)
+    )
+
+    def step(carry, inp):
+        st_prev = carry
+        dec, st_new = inp
+        st = dec[:, :, None, None] * st_prev + st_new
+        return st, st_prev
+
+    final, prev_states = jax.lax.scan(
+        step,
+        s0,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # inter-chunk (off-diagonal) contribution
+    in_decay = jnp.exp(cum)                            # decay from chunk start
+    y_off = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp", cr, in_decay, prev_states)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y[:, :s_orig], final
+
+
+def ssm_forward(
+    p: dict, cfg: ModelConfig, x: jax.Array,
+    init_state: SSMState | None = None,
+) -> tuple[jax.Array, SSMState]:
+    """Full-sequence Mamba2 block. x: (B,S,d_model)."""
+    proj = x @ p["w_in"]
+    z, raw_xbc, dt = _split_proj(cfg, proj)
+    x_bc = _causal_conv(p, raw_xbc)
+
+    di = cfg.ssm_d_inner
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    xs = x_bc[..., :di]
+    b = x_bc[..., di : di + gn].reshape(*x.shape[:2], cfg.ssm_ngroups, cfg.ssm_state)
+    c = x_bc[..., di + gn :].reshape(*x.shape[:2], cfg.ssm_ngroups, cfg.ssm_state)
+
+    h, pd = cfg.ssm_nheads, cfg.ssm_headdim
+    xh = xs.reshape(*x.shape[:2], h, pd)
+    xh = shard_act(xh, "batch", "seq", "act_ssm", None)
+    dt = jax.nn.softplus(f32(dt) + f32(p["dt_bias"]))
+    a = -jnp.exp(f32(p["a_log"]))
+
+    init = None if init_state is None else init_state.ssd
+    y, final = ssd_chunked(xh, dt, a, b, c, cfg.ssm_chunk, init)
+    y = y + f32(p["d_skip"])[None, None, :, None] * f32(xh)
+    y = y.reshape(*x.shape[:2], di).astype(x.dtype)
+    y = gated_rmsnorm(p["norm"], y, z, cfg.norm_eps)
+    out = y @ p["w_out"]
+
+    # decode conv state = last (K-1) *pre-activation* xBC inputs
+    k = cfg.ssm_conv
+    conv_state = raw_xbc[:, -(k - 1):, :]
+    return shard_act(out, "batch", "seq", "embed"), SSMState(conv=conv_state, ssd=final.astype(jnp.float32))
+
+
+def ssm_decode(
+    p: dict, cfg: ModelConfig, x: jax.Array, state: SSMState,
+) -> tuple[jax.Array, SSMState]:
+    """Single-token recurrent step. x: (B,1,d_model)."""
+    proj = x @ p["w_in"]                              # (B,1,·)
+    z, x_bc_new, dt = _split_proj(cfg, proj)
+
+    # causal conv over [conv_state | new]
+    window = jnp.concatenate([state.conv, x_bc_new], axis=1)   # (B,K,C)
+    w = f32(p["conv_w"])                                        # (K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", f32(window), w) + f32(p["conv_b"])
+    x_bc = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)    # (B,1,C)
+
+    di = cfg.ssm_d_inner
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    xs = x_bc[..., :di]
+    b = x_bc[..., di : di + gn].reshape(x.shape[0], cfg.ssm_ngroups, cfg.ssm_state)
+    c = x_bc[..., di + gn :].reshape(x.shape[0], cfg.ssm_ngroups, cfg.ssm_state)
+
+    h, pd = cfg.ssm_nheads, cfg.ssm_headdim
+    xh = f32(xs).reshape(x.shape[0], h, pd)                     # (B,H,P)
+    dtv = jax.nn.softplus(f32(dt)[:, 0, :] + f32(p["dt_bias"]))  # (B,H)
+    a = -jnp.exp(f32(p["a_log"]))                               # (H,)
+
+    g = cfg.ssm_ngroups
+    bh = jnp.broadcast_to(
+        f32(b).reshape(x.shape[0], g, 1, cfg.ssm_state), (x.shape[0], g, h // g, cfg.ssm_state)
+    ).reshape(x.shape[0], h, cfg.ssm_state)
+    ch = jnp.broadcast_to(
+        f32(c).reshape(x.shape[0], g, 1, cfg.ssm_state), (x.shape[0], g, h // g, cfg.ssm_state)
+    ).reshape(x.shape[0], h, cfg.ssm_state)
+
+    decay = jnp.exp(dtv * a[None, :])                           # (B,H)
+    s_new = (
+        decay[:, :, None, None] * state.ssd
+        + jnp.einsum("bh,bhp,bhn->bhpn", dtv, xh, bh)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", s_new, ch) + f32(p["d_skip"])[None, :, None] * xh
+    y = y.reshape(x.shape[0], 1, di).astype(x.dtype)
+    y = gated_rmsnorm(p["norm"], y, z, cfg.norm_eps)
+    out = y @ p["w_out"]
+
+    new_conv = window[:, 1:, :]                                 # slide window
+    return out, SSMState(conv=new_conv, ssd=s_new)

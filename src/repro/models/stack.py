@@ -1,0 +1,300 @@
+"""Composable transformer stacks: block descriptors + scan-over-layers.
+
+A model is a list of ``Group``s.  Each group scans ``steps`` times over a
+tuple of unrolled ``BlockDef``s (period > 1 expresses Jamba-style interleaves
+— one traced period regardless of depth, which keeps 94-layer compiles
+cheap).  Params for a group are stacked along a leading ``layers`` axis.
+
+Caches: each group yields / consumes a per-sublayer cache pytree stacked over
+steps.  ``cache_specs`` builds the matching ShapeDtypeStruct + logical-axes
+trees for AOT decode lowering without running prefill.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import mlp, mlp_defs, rmsnorm, rmsnorm_defs
+from repro.models.params import ParamDef, stack_defs
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDef:
+    mixer: str                 # "attn" | "mla" | "ssm"
+    ffn: str                   # "mlp" | "moe" | "none"
+    causal: bool = True
+    cross: bool = False        # decoder block with cross-attention
+    dense_ff: int = 0          # d_ff override for this block's dense MLP
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    steps: int
+    blocks: tuple[BlockDef, ...]
+
+    @property
+    def layers(self) -> int:
+        return self.steps * len(self.blocks)
+
+
+# ---------------------------------------------------------------------------
+# Architecture -> groups
+# ---------------------------------------------------------------------------
+
+def plan_groups(cfg: ModelConfig) -> tuple[list[Group], list[Group]]:
+    """Returns (encoder_groups, decoder_groups). Encoder empty for LMs."""
+    if cfg.family == "encdec":
+        enc = [Group(cfg.enc_layers, (BlockDef("attn", "mlp", causal=False),))]
+        dec = [Group(cfg.num_layers, (BlockDef("attn", "mlp", cross=True),))]
+        return enc, dec
+    if cfg.family == "ssm":
+        return [], [Group(cfg.num_layers, (BlockDef("ssm", "none"),))]
+    if cfg.family == "hybrid":
+        period = cfg.attn_period
+        assert cfg.num_layers % period == 0
+        blocks = []
+        for i in range(period):
+            mixer = "attn" if i == period // 2 else "ssm"
+            ffn = "moe" if (i % cfg.moe_layer_period == cfg.moe_layer_period - 1) else "mlp"
+            blocks.append(BlockDef(mixer, ffn))
+        return [], [Group(cfg.num_layers // period, tuple(blocks))]
+    if cfg.family == "moe":
+        mixer = "mla" if cfg.use_mla else "attn"
+        groups = []
+        n = cfg.num_layers
+        if cfg.first_layer_dense:
+            groups.append(Group(1, (BlockDef(mixer, "mlp", dense_ff=cfg.dense_d_ff),)))
+            n -= 1
+        groups.append(Group(n, (BlockDef(mixer, "moe"),)))
+        return [], groups
+    # dense / vlm
+    return [], [Group(cfg.num_layers, (BlockDef("attn", "mlp"),))]
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+
+def _block_defs(cfg: ModelConfig, bd: BlockDef, dtype) -> dict:
+    d: dict[str, Any] = {"ln1": rmsnorm_defs(cfg.d_model, dtype)}
+    if bd.mixer == "attn":
+        d["mixer"] = attn.gqa_defs(cfg, dtype)
+    elif bd.mixer == "mla":
+        d["mixer"] = attn.mla_defs(cfg, dtype)
+    elif bd.mixer == "ssm":
+        d["mixer"] = ssm_mod.ssm_defs(cfg, dtype)
+    else:
+        raise ValueError(bd.mixer)
+    if bd.cross:
+        d["ln_cross"] = rmsnorm_defs(cfg.d_model, dtype)
+        d["cross"] = attn.gqa_defs(cfg, dtype)
+    if bd.ffn == "mlp":
+        d["ln2"] = rmsnorm_defs(cfg.d_model, dtype)
+        d["ffn"] = mlp_defs(cfg.d_model, bd.dense_ff or cfg.d_ff, dtype)
+    elif bd.ffn == "moe":
+        d["ln2"] = rmsnorm_defs(cfg.d_model, dtype)
+        d["ffn"] = moe_mod.moe_defs(cfg, dtype)
+    return d
+
+
+def group_param_defs(cfg: ModelConfig, g: Group, dtype) -> dict:
+    per_step = {f"blk{i}": _block_defs(cfg, bd, dtype) for i, bd in enumerate(g.blocks)}
+    return stack_defs(per_step, g.steps)
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (for decode AOT lowering)
+# ---------------------------------------------------------------------------
+
+def _block_cache_spec(
+    cfg: ModelConfig, bd: BlockDef, b: int, s: int, enc_s: int,
+    kv_int8: bool = False,
+):
+    """(ShapeDtypeStruct tree, logical-axes tree) for ONE block's cache."""
+    dt = jnp.bfloat16
+    structs: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    if bd.mixer == "attn":
+        hd = cfg.resolved_head_dim
+        shape = (b, s, cfg.num_kv_heads, hd)
+        kv_dt = jnp.int8 if kv_int8 else dt
+        structs["k"] = jax.ShapeDtypeStruct(shape, kv_dt)
+        structs["v"] = jax.ShapeDtypeStruct(shape, kv_dt)
+        kv_axes = ("kv_batch", "kv_seq", "kv_heads", "head_dim")
+        axes["k"] = kv_axes
+        axes["v"] = kv_axes
+        if kv_int8:  # per-(token, head) f32 scales (paper §II-C compression)
+            structs["k_scale"] = jax.ShapeDtypeStruct(shape[:-1], jnp.float32)
+            structs["v_scale"] = jax.ShapeDtypeStruct(shape[:-1], jnp.float32)
+            axes["k_scale"] = kv_axes[:-1]
+            axes["v_scale"] = kv_axes[:-1]
+    elif bd.mixer == "mla":
+        r = cfg.kv_lora_rank + cfg.rope_head_dim
+        structs["latent"] = jax.ShapeDtypeStruct((b, s, r), dt)
+        axes["latent"] = ("kv_batch", "kv_seq", "lora")
+    elif bd.mixer == "ssm":
+        conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        structs["conv"] = jax.ShapeDtypeStruct((b, cfg.ssm_conv - 1, conv_dim), dt)
+        axes["conv"] = ("kv_batch", "conv", "ssm_out")
+        structs["ssd"] = jax.ShapeDtypeStruct(
+            (b, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32
+        )
+        axes["ssd"] = ("kv_batch", "ssm_heads", "head_dim", "ssm_state")
+    if bd.cross:
+        hd = cfg.resolved_head_dim
+        shape = (b, enc_s, cfg.num_kv_heads, hd)
+        structs["cross_k"] = jax.ShapeDtypeStruct(shape, dt)
+        structs["cross_v"] = jax.ShapeDtypeStruct(shape, dt)
+        axes["cross_k"] = ("kv_batch", "kv_seq", "kv_heads", "head_dim")
+        axes["cross_v"] = ("kv_batch", "kv_seq", "kv_heads", "head_dim")
+    return structs, axes
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int, enc_seq: int = 0,
+                kv_int8: bool = False):
+    """Stacked (over steps) cache specs for all decoder groups."""
+    _, dec = plan_groups(cfg)
+    structs, axes = [], []
+    for g in dec:
+        gs, ga = {}, {}
+        for i, bd in enumerate(g.blocks):
+            bs_, ba_ = _block_cache_spec(cfg, bd, batch, seq, enc_seq, kv_int8)
+            gs[f"blk{i}"] = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct((g.steps, *x.shape), x.dtype), bs_
+            )
+            ga[f"blk{i}"] = jax.tree.map(
+                lambda a: ("layers", *a), ba_, is_leaf=lambda x: isinstance(x, tuple)
+            )
+        structs.append(gs)
+        axes.append(ga)
+    return structs, axes
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _apply_block(
+    bp: dict, cfg: ModelConfig, bd: BlockDef, x, positions, mode: str,
+    cache: Optional[dict], kv_len, enc_out,
+):
+    """One sublayer. Returns (x, new_cache, aux)."""
+    aux = jnp.float32(0.0)
+    new_cache: dict[str, Any] = {}
+    h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+
+    if bd.mixer == "attn":
+        if mode == "decode":
+            y, k_cache, v_cache, k_s, v_s = attn.gqa_decode(
+                bp["mixer"], cfg, h, kv_len, cache["k"], cache["v"],
+                cache.get("k_scale"), cache.get("v_scale"),
+            )
+            new_cache = {"k": k_cache, "v": v_cache}
+            if k_s is not None:
+                new_cache["k_scale"], new_cache["v_scale"] = k_s, v_s
+        else:
+            y, upd = attn.gqa_forward(bp["mixer"], cfg, h, positions, causal=bd.causal)
+            if mode == "prefill":
+                new_cache = {"k": upd.k, "v": upd.v}
+    elif bd.mixer == "mla":
+        if mode == "decode":
+            y, lat_cache = attn.mla_decode(
+                bp["mixer"], cfg, h, kv_len, cache["latent"]
+            )
+            new_cache = {"latent": lat_cache}
+        else:
+            y, latent = attn.mla_forward(bp["mixer"], cfg, h, positions)
+            if mode == "prefill":
+                new_cache = {"latent": latent}
+    elif bd.mixer == "ssm":
+        if mode == "decode":
+            st = ssm_mod.SSMState(conv=cache["conv"], ssd=cache["ssd"])
+            y, st = ssm_mod.ssm_decode(bp["mixer"], cfg, h, st)
+            new_cache = {"conv": st.conv, "ssd": st.ssd}
+        else:
+            y, st = ssm_mod.ssm_forward(bp["mixer"], cfg, h)
+            if mode == "prefill":
+                new_cache = {"conv": st.conv.astype(jnp.bfloat16), "ssd": st.ssd}
+    else:
+        raise ValueError(bd.mixer)
+    x = x + y
+
+    if bd.cross:
+        hc = rmsnorm(bp["ln_cross"], x, cfg.norm_eps)
+        if mode == "decode":
+            ck, cv = cache["cross_k"], cache["cross_v"]
+            new_cache["cross_k"], new_cache["cross_v"] = ck, cv
+        else:
+            enc_pos = jnp.arange(enc_out.shape[1])[None, :]
+            ck = jnp.einsum("bsd,dhk->bshk", enc_out, bp["cross"]["w_k"])
+            cv = jnp.einsum("bsd,dhk->bshk", enc_out, bp["cross"]["w_v"])
+            if cfg.qkv_bias:
+                ck, cv = ck + bp["cross"]["b_k"], cv + bp["cross"]["b_v"]
+            ck = attn.apply_rope(ck, enc_pos, cfg.rope_theta)
+            if mode == "prefill":
+                new_cache["cross_k"], new_cache["cross_v"] = ck, cv
+        q = jnp.einsum("bsd,dhk->bshk", hc, bp["cross"]["w_q"])
+        if cfg.qkv_bias:
+            q = q + bp["cross"]["b_q"]
+        qpos = kv_len[:, None] if mode == "decode" else positions
+        q = attn.apply_rope(q, qpos, cfg.rope_theta)
+        yc = attn.full_attention(q, ck, cv, causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", yc, bp["cross"]["w_o"])
+
+    if bd.ffn == "mlp":
+        h = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        x = x + mlp(bp["ffn"], h)
+    elif bd.ffn == "moe":
+        h = rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        y, a = moe_mod.moe_forward(bp["ffn"], cfg, h)
+        x = x + y
+        aux = aux + a
+    return x, new_cache, aux
+
+
+def apply_group(
+    gp: dict, cfg: ModelConfig, g: Group, x, positions, mode: str,
+    cache=None, kv_len=None, enc_out=None, remat: bool = False,
+    remat_policy: str = "dots",
+):
+    """Scan a group over its steps. Returns (x, new_cache_stacked, aux_sum)."""
+
+    def body(carry, step_in):
+        xc, aux_acc = carry
+        step_params, step_cache = step_in
+        new_caches = {}
+        for i, bd in enumerate(g.blocks):
+            c_in = None if step_cache is None else step_cache.get(f"blk{i}")
+            xc, nc, aux = _apply_block(
+                step_params[f"blk{i}"], cfg, bd, xc, positions, mode,
+                c_in, kv_len, enc_out,
+            )
+            new_caches[f"blk{i}"] = nc
+            aux_acc = aux_acc + aux
+        return (xc, aux_acc), new_caches
+
+    if remat:
+        policy = (
+            None  # save nothing: recompute everything incl. gathered weights
+            if remat_policy == "nothing"
+            else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+        body = jax.checkpoint(body, policy=policy)
+
+    xs = (gp, cache) if cache is not None else (gp, None)
+    if cache is None:
+        # scan only over params; emit caches as ys
+        (x, aux), caches = jax.lax.scan(
+            lambda c, p: body(c, (p, None)), (x, jnp.float32(0.0)), gp
+        )
+    else:
+        (x, aux), caches = jax.lax.scan(body, (x, jnp.float32(0.0)), (gp, cache))
+    del xs
+    return x, caches, aux

@@ -1,0 +1,20 @@
+"""Optimizers and distributed-optimization tricks."""
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine
+from repro.optim.grad_compress import (
+    compress_topk,
+    decompress_topk,
+    int8_quantize,
+    int8_dequantize,
+)
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "warmup_cosine",
+    "compress_topk",
+    "decompress_topk",
+    "int8_quantize",
+    "int8_dequantize",
+]

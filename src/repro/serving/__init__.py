@@ -1,0 +1,5 @@
+"""Serving: FLIC-paged KV cache + continuous-batching engine."""
+from repro.serving.kv_cache import FlicPageManager, PagePool
+from repro.serving.engine import ServeEngine, Request
+
+__all__ = ["FlicPageManager", "PagePool", "ServeEngine", "Request"]

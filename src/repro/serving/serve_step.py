@@ -1,0 +1,80 @@
+"""Jitted paged decode step for dense GQA models.
+
+Scans the layer stack with K/V read through the FLIC page pool: each layer
+scatters the fresh K/V row into the sequence's current page and attends via
+``repro.kernels.ops.paged_attention`` (Pallas on TPU, oracle under AOT/CPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import embed_tokens, f32, rmsnorm
+from repro.models.attention import apply_rope
+from repro.models.model import _lm_head_weight
+
+
+def _project_decode(p, cfg: ModelConfig, h, pos):
+    q = jnp.einsum("bsd,dhk->bshk", h, p["w_q"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["w_v"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    if cfg.use_qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    return q, k, v
+
+
+@partial(jax.jit, static_argnames=("cfg", "kernel_backend"))
+def paged_decode_step(
+    params,
+    cfg: ModelConfig,
+    token: jax.Array,        # (B, 1) int32
+    pos: jax.Array,          # (B,) int32 current lengths (write position)
+    k_pool: jax.Array,       # (L, P, page, Hkv, D)
+    v_pool: jax.Array,       # (L, P, page, Hkv, D)
+    page_table: jax.Array,   # (B, max_pages) int32
+    kernel_backend: str = None,
+):
+    assert cfg.family in ("dense", "vlm"), "paged path supports GQA stacks"
+    page = k_pool.shape[2]
+    hkv = cfg.num_kv_heads
+    g = cfg.num_heads // hkv
+    bsz = token.shape[0]
+    bidx = jnp.arange(bsz)
+
+    x = embed_tokens(params["embed"], token)
+    layer_params = params["dec"]["g0"]  # dense stacks: one scanned group
+
+    cur_page = page_table[bidx, pos // page]   # (B,)
+    offset = pos % page
+
+    def body(x, inp):
+        lp, kp, vp = inp                       # layer params + this layer's pools
+        h = rmsnorm(lp["blk0"]["ln1"], x, cfg.norm_eps)
+        q, k, v = _project_decode(lp["blk0"]["mixer"], cfg, h, pos)
+        kp = kp.at[cur_page, offset].set(k[:, 0].astype(kp.dtype))
+        vp = vp.at[cur_page, offset].set(v[:, 0].astype(vp.dtype))
+        qg = q[:, 0].reshape(bsz, hkv, g, -1)
+        out = ops.paged_attention(
+            qg, kp, vp, page_table, pos + 1, backend=kernel_backend
+        )
+        out = out.reshape(bsz, 1, cfg.num_heads, -1).astype(x.dtype)
+        y = jnp.einsum("bshk,hkd->bsd", out, lp["blk0"]["mixer"]["w_o"])
+        x = x + y
+        h = rmsnorm(lp["blk0"]["ln2"], x, cfg.norm_eps)
+        hh = jax.nn.silu(h @ lp["blk0"]["ffn"]["w_gate"]) * (h @ lp["blk0"]["ffn"]["w_up"])
+        x = x + hh @ lp["blk0"]["ffn"]["w_down"]
+        return x, (kp, vp)
+
+    x, (k_pool, v_pool) = jax.lax.scan(body, x, (layer_params, k_pool, v_pool))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = f32(x @ _lm_head_weight(params, cfg))
+    return logits, k_pool, v_pool

@@ -1,0 +1,20 @@
+"""Sharding: logical-axis rules resolved to PartitionSpecs per parallelism plan."""
+from repro.shard.partition import (
+    Plan,
+    PLANS,
+    axes_to_pspec,
+    current_rules,
+    params_pspecs,
+    shard_act,
+    use_rules,
+)
+
+__all__ = [
+    "Plan",
+    "PLANS",
+    "axes_to_pspec",
+    "current_rules",
+    "params_pspecs",
+    "shard_act",
+    "use_rules",
+]

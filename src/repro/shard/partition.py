@@ -1,0 +1,280 @@
+"""Logical-axis sharding rules (MaxText-style), resolved per parallelism plan.
+
+A *plan* maps logical axis names to mesh axes.  Model code only ever names
+logical axes (``shard_act(x, "batch", "seq", "embed")``); the plan decides
+what that means on the current mesh.  Changing the plan is the main
+hillclimbing knob in EXPERIMENTS.md §Perf.
+
+Plans (defaults; per-cell overrides are applied by the dry-run driver):
+
+* ``train``    — batch over (pod, data); params FSDP over data on their
+  widest non-TP dim; TP over model for heads/ffn/experts/vocab.
+* ``prefill``  — activations: batch over (pod, data), heads/ffn over model.
+* ``decode``   — batch over (pod, data); KV pages: kv_seq over model (robust
+  to kv_heads < axis size).
+* ``long``     — batch=1: sequence/state sharded over (data, model).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+Axes = tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    name: str
+    rules: dict  # logical axis -> mesh axis | tuple | None
+    flags: frozenset = frozenset()  # model-code behavior switches (hillclimb)
+
+    def resolve(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        return self.rules.get(logical, None)
+
+    def has(self, flag: str) -> bool:
+        return flag in self.flags
+
+
+_DATA = ("pod", "data")  # batch-like axes gang pod+data when both exist
+
+
+def _mk(name: str, _flags: tuple = (), **over) -> Plan:
+    rules = {
+        # activations
+        "batch": _DATA,
+        "kv_batch": _DATA,   # KV-cache batch dim (decouplable from act batch)
+        "seq": None,
+        "kv_seq": None,
+        "embed": None,
+        "act_heads": "model",
+        "act_ffn": "model",
+        "act_experts": "model",
+        "act_ssm": "model",
+        "moe_b": _DATA,   # MoE dispatch buffer batch dim (EP plans: None)
+        "moe_d": None,    # MoE dispatch buffer d dim (EP plans: data)
+        # params — TP dims (role-suffixed: _in = contraction, _out = output)
+        "heads": "model",
+        "heads_in": "model",
+        "kv_heads": "model",
+        "qkv": "model",
+        "ffn_in": "model",
+        "ffn_out": "model",
+        "experts": "model",
+        "moe_ffn_in": "model",
+        "moe_ffn_out": "model",
+        "vocab": "model",
+        "head_vocab": "model",
+        "head_embed": "data",
+        "ssm_in": "model",
+        "ssm_out": "model",
+        "ssm_heads": "model",
+        # params — FSDP dims (the non-TP wide dim, by role)
+        "embed_in": "data",
+        "embed_out": "data",
+        # never sharded
+        "layers": None,
+        "head_dim": None,
+        "ssm_state": None,
+        "conv": None,
+        "lora": None,
+        "null": None,
+    }
+    rules.update(over)
+    return Plan(name, rules, frozenset(_flags))
+
+
+PLANS: dict[str, Plan] = {
+    "train": _mk("train"),
+    # §Perf variant: replicate KV heads up to the TP degree so q AND k/v are
+    # head-sharded — removes the per-block all-reduces XLA inserts when
+    # kv_heads < |model| leaves k/v unsharded while q is sharded.
+    "train_kvrep": _mk("train_kvrep", _flags=("kv_expand",)),
+    # §Perf variant: token embedding table replicated (embed dims only FSDP)
+    # — kills the 'involuntary full rematerialization' gather on vocab-
+    # sharded tables at the cost of vocab-dim memory.
+    "train_embed_repl": _mk(
+        "train_embed_repl", _flags=("kv_expand",), vocab=None
+    ),
+    # §Perf variant: pure ZeRO-3 data parallelism — batch over EVERY axis,
+    # params/optimizer fully sharded on their widest dim, no tensor
+    # parallelism (activations never cross chips; collectives = per-layer
+    # param all-gathers + per-layer grad reduce-scatters).  Wants mb=1.
+    "train_zero3": _mk(
+        "train_zero3",
+        _flags=("mb1",),
+        batch=("pod", "data", "model"),
+        heads=None, heads_in=None, kv_heads=None, qkv=None,
+        ffn_in=None, ffn_out=None, experts=None,
+        moe_ffn_in=None, moe_ffn_out=None, vocab=None,
+        ssm_in=None, ssm_out=None, ssm_heads=None,
+        act_heads=None, act_ffn=None, act_experts=None, act_ssm=None,
+        embed_in=("data", "model"), embed_out=("data", "model"),
+        # LM head 2D-sharded on its own axes: logits stay vocab-local,
+        # the d-contraction partial-sum reduces over 'data' only.
+        head_embed="data", head_vocab="model",
+    ),
+    # §Perf variant for MoE training: expert-stationary EP.  Experts 2D-
+    # sharded (E -> model, d -> data) and NEVER gathered; the MoE dispatch
+    # buffer contracts its token-d over 'data' so partial sums all-reduce
+    # activation-sized buffers.  No tensor parallelism (attention params are
+    # small; FSDP-gathered over data).  Wants mb=4.
+    "train_ep": _mk(
+        "train_ep",
+        _flags=("mb4",),
+        batch=("pod", "data"),
+        heads=None, heads_in=None, kv_heads=None, qkv=None,
+        ffn_in=None, ffn_out=None, vocab=None,
+        act_heads=None, act_ffn=None, act_ssm=None,
+        experts="model", moe_ffn_in=None, moe_ffn_out=None,
+        embed_in="data", embed_out="data",
+        moe_b=None, moe_d="data",
+        head_embed="data", head_vocab="model",
+    ),
+    "prefill": _mk("prefill"),
+    "prefill_kvrep": _mk("prefill_kvrep", _flags=("kv_expand",)),
+    # decode: batch over data; kv_seq sharded over model so every arch's
+    # kv_heads count (4/8/10/16) is irrelevant to divisibility.
+    "decode": _mk(
+        "decode",
+        kv_seq="model",
+        kv_heads=None,
+    ),
+    # §Perf winner for decode: WEIGHT-STATIONARY sharding.  Every weight's
+    # contraction dim lives on 'model', its output dim on 'data' (256-way,
+    # fits HBM); decode activations are tiny, so GSPMD reshards THEM (KBs)
+    # and all-reduces small outputs instead of gathering weights (100s of
+    # MB/layer).  KV cache: batch over data, kv_seq over model.
+    "decode_stationary": _mk(
+        "decode_stationary",
+        batch=None,          # activations: batch replicated (tiny at decode),
+        embed="data",        # features carry the data sharding instead
+        kv_batch=_DATA,      # the CACHE stays batch-sharded (it is huge)
+        kv_seq="model",
+        kv_heads=None,
+        act_heads="model", act_ffn="model", act_experts="model", act_ssm="model",
+        # alternate shardings so every contraction matches its input:
+        # x.d(data) @ W(embed_in=data, *_out=model) -> h(model)
+        # h(model)  @ W(*_in=model, embed_out=data) -> x.d(data)
+        embed_in="data", embed_out="data",
+        ffn_in="model", ffn_out="model",
+        heads="model", heads_in="model",
+        ssm_in="model", ssm_out="model",
+        moe_ffn_in="model", moe_ffn_out="model",
+        experts="model", moe_d=None,
+        vocab=None,
+        head_embed="data", head_vocab="model",
+        lora=None,
+    ),
+    # §Perf variant: decode_stationary + int8 KV pages (paper §II-C's
+    # compression layer on FLIC pages): halves the KV read bytes — the
+    # decode memory-roofline term — at ~1e-2 relative attention error.
+    "decode_stationary_int8": _mk(
+        "decode_stationary_int8",
+        _flags=("kv_int8",),
+        batch=None,
+        embed="data",
+        kv_batch=_DATA,
+        kv_seq="model",
+        kv_heads=None,
+        act_heads="model", act_ffn="model", act_experts="model", act_ssm="model",
+        embed_in="data", embed_out="data",
+        ffn_in="model", ffn_out="model",
+        heads="model", heads_in="model",
+        ssm_in="model", ssm_out="model",
+        moe_ffn_in="model", moe_ffn_out="model",
+        experts="model", moe_d=None,
+        vocab=None,
+        head_embed="data", head_vocab="model",
+        lora=None,
+    ),
+    # §Perf variant: decode with the token-embedding table replicated on the
+    # vocab dim (gathers become local) — embed/ffn stay 2D-sharded.
+    "decode_vrepl": _mk(
+        "decode_vrepl",
+        kv_seq="model",
+        kv_heads=None,
+        vocab=None,
+    ),
+    # long-context decode with global_batch=1: spread state/sequence over
+    # everything; batch unsharded.
+    "long": _mk(
+        "long",
+        batch=None,
+        kv_seq=("data", "model"),
+        kv_heads=None,
+        act_ssm="model",
+    ),
+}
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    plan: Optional[Plan] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Optional[Mesh], plan: Plan | str):
+    """Activate (mesh, plan) so model code's shard_act() constraints bind."""
+    if isinstance(plan, str):
+        plan = PLANS[plan]
+    prev = (_CTX.mesh, _CTX.plan)
+    _CTX.mesh, _CTX.plan = mesh, plan
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.plan = prev
+
+
+def current_rules() -> tuple[Optional[Mesh], Optional[Plan]]:
+    return _CTX.mesh, _CTX.plan
+
+
+def _filter_spec(mesh: Mesh, entries) -> P:
+    """Drop mesh axes that don't exist on this mesh; keep order; dedupe."""
+    used = set()
+    out = []
+    for e in entries:
+        if e is None:
+            out.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        keep = tuple(a for a in axes if a in mesh.axis_names and a not in used)
+        used.update(keep)
+        out.append(keep if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def axes_to_pspec(axes: Axes, mesh: Mesh, plan: Plan) -> P:
+    return _filter_spec(mesh, [plan.resolve(a) for a in axes])
+
+
+def shard_act(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain an activation's sharding by logical axes (no-op w/o rules)."""
+    mesh, plan = _CTX.mesh, _CTX.plan
+    if mesh is None or plan is None:
+        return x
+    spec = axes_to_pspec(tuple(axes), mesh, plan)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def params_pspecs(axes_tree, mesh: Mesh, plan: Plan | str):
+    """Resolve a logical-axes tree (from ``models.params.logical_axes``) to a
+    tree of NamedShardings for jit in_shardings."""
+    if isinstance(plan, str):
+        plan = PLANS[plan]
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, axes_to_pspec(axes, mesh, plan)),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )

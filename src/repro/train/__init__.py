@@ -1,0 +1,5 @@
+"""Training runtime: step function, trainer loop, fault handling."""
+from repro.train.train_step import TrainHyper, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["TrainHyper", "make_train_step", "Trainer", "TrainerConfig"]

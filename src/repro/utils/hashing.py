@@ -1,0 +1,37 @@
+"""Deterministic 32-bit hashing in JAX (splitmix-style finalizer).
+
+FLIC keys cache lines by a hash of (generation timestamp, producer node id)
+— see paper §IV.a: "The key that we use to store lines in the cache is
+generated from a hash of a long string that includes the timestamp at which
+the data was generated."  We use a uint32 splitmix finalizer, which is cheap,
+well-distributed, and identical on host and device.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_M1 = jnp.uint32(0x85EBCA6B)
+_M2 = jnp.uint32(0xC2B2AE35)
+_GOLDEN = jnp.uint32(0x9E3779B9)
+
+
+def splitmix32(x) -> jnp.ndarray:
+    """splitmix32 finalizer: avalanching bijection on uint32."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x + _GOLDEN
+    x = (x ^ (x >> 16)) * _M1
+    x = (x ^ (x >> 13)) * _M2
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_u32(x) -> jnp.ndarray:
+    """Hash a uint32 (or int) array elementwise to uint32."""
+    return splitmix32(x)
+
+
+def hash2_u32(a, b) -> jnp.ndarray:
+    """Hash a pair of uint32 arrays to a single uint32 (order-sensitive)."""
+    a = jnp.asarray(a, jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    return splitmix32(splitmix32(a) ^ (b + _GOLDEN + (a << 6) + (a >> 2)))

@@ -1,0 +1,44 @@
+"""Pytree helpers used across the framework."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def tree_param_count(tree: Any) -> int:
+    """Total number of array elements in a pytree (params, opt state, ...)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(leaf.shape) if hasattr(leaf, "shape") else 1 for leaf in leaves))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total byte size of a pytree of arrays / ShapeDtypeStructs."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_flatten_with_paths(tree: Any):
+    """[(dotted.path, leaf)] for a pytree — used by the checkpointer."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(_path_str(p) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def _path_str(entry) -> str:
+    if isinstance(entry, jax.tree_util.DictKey):
+        return str(entry.key)
+    if isinstance(entry, jax.tree_util.SequenceKey):
+        return str(entry.idx)
+    if isinstance(entry, jax.tree_util.GetAttrKey):
+        return str(entry.name)
+    if isinstance(entry, jax.tree_util.FlattenedIndexKey):
+        return str(entry.key)
+    return str(entry)

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Make `repro` importable regardless of how pytest is invoked.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Smoke tests must see the host as-is (1 CPU device) — the 512-device flag
+# belongs ONLY to repro.launch.dryrun (it sets XLA_FLAGS itself).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

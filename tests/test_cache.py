@@ -1,0 +1,169 @@
+"""Unit tests for the FLIC cache primitives (repro.core)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CacheLine,
+    empty_cache,
+    fog_lookup,
+    insert,
+    insert_batch,
+    local_lookup,
+)
+from repro.core.cache_state import occupancy, set_index
+from repro.core.flic import invalidate
+
+
+def line(key, ts, origin=0, d=4, val=1.0, dirty=False):
+    return CacheLine(
+        key=jnp.uint32(key),
+        data_ts=jnp.int32(ts),
+        origin=jnp.int32(origin),
+        data=jnp.full((d,), val, jnp.float32),
+        valid=jnp.asarray(True),
+        dirty=jnp.asarray(dirty),
+    )
+
+
+class TestInsertLookup:
+    def test_insert_then_hit(self):
+        c = empty_cache(8, 2, 4)
+        c, ev = insert(c, line(123, ts=5), now=10)
+        assert not bool(ev.valid)
+        c, res = local_lookup(c, jnp.uint32(123), now=11)
+        assert bool(res.hit)
+        assert int(res.data_ts) == 5
+        np.testing.assert_allclose(np.asarray(res.data), 1.0)
+
+    def test_miss_returns_invalid(self):
+        c = empty_cache(8, 2, 4)
+        c, res = local_lookup(c, jnp.uint32(999), now=0)
+        assert not bool(res.hit)
+        assert int(res.data_ts) == -1
+
+    def test_soft_coherence_newer_overwrites(self):
+        c = empty_cache(8, 2, 4)
+        c, _ = insert(c, line(7, ts=5, val=1.0), now=1)
+        c, _ = insert(c, line(7, ts=9, val=2.0), now=2)
+        _, res = local_lookup(c, jnp.uint32(7), now=3)
+        assert int(res.data_ts) == 9
+        np.testing.assert_allclose(np.asarray(res.data), 2.0)
+
+    def test_soft_coherence_stale_dropped(self):
+        """Paper §I.A.a: an older timestamp must NOT overwrite a newer one."""
+        c = empty_cache(8, 2, 4)
+        c, _ = insert(c, line(7, ts=9, val=2.0), now=1)
+        c, _ = insert(c, line(7, ts=5, val=1.0), now=2)
+        _, res = local_lookup(c, jnp.uint32(7), now=3)
+        assert int(res.data_ts) == 9
+        np.testing.assert_allclose(np.asarray(res.data), 2.0)
+
+    def test_equal_ts_not_overwritten(self):
+        c = empty_cache(8, 2, 4)
+        c, _ = insert(c, line(7, ts=5, val=1.0), now=1)
+        c, _ = insert(c, line(7, ts=5, val=3.0), now=2)
+        _, res = local_lookup(c, jnp.uint32(7), now=3)
+        np.testing.assert_allclose(np.asarray(res.data), 1.0)
+
+    def test_invalid_line_noop(self):
+        c = empty_cache(8, 2, 4)
+        ln = line(5, ts=1)
+        ln = CacheLine(**{**ln.__dict__, "valid": jnp.asarray(False)})
+        c2, ev = insert(c, ln, now=1)
+        assert int(occupancy(c2)) == 0
+        assert not bool(ev.valid)
+
+
+class TestLRUEviction:
+    def test_lru_victim_is_least_recent(self):
+        # one set (sets=1), 2 ways
+        c = empty_cache(1, 2, 4)
+        c, _ = insert(c, line(10, ts=1, val=1.0), now=1)
+        c, _ = insert(c, line(20, ts=2, val=2.0), now=2)
+        # touch key 10 so key 20 becomes LRU
+        c, _ = local_lookup(c, jnp.uint32(10), now=3)
+        c, ev = insert(c, line(30, ts=4, val=3.0), now=4)
+        assert bool(ev.valid)
+        assert int(jnp.asarray(ev.key, jnp.uint32)) == 20
+        _, r10 = local_lookup(c, jnp.uint32(10), now=5)
+        _, r30 = local_lookup(c, jnp.uint32(30), now=5)
+        assert bool(r10.hit) and bool(r30.hit)
+
+    def test_eviction_preserves_dirty_flag(self):
+        c = empty_cache(1, 1, 4)
+        c, _ = insert(c, line(1, ts=1, dirty=True), now=1)
+        c, ev = insert(c, line(2, ts=2), now=2)
+        assert bool(ev.valid) and bool(ev.dirty)
+
+    def test_capacity_never_exceeded(self):
+        c = empty_cache(4, 2, 2)
+        for i in range(50):
+            c, _ = insert(c, line(i * 7919 + 1, ts=i, d=2), now=i)
+        assert int(occupancy(c)) <= 8
+
+    def test_invalidate(self):
+        c = empty_cache(4, 2, 2)
+        c, _ = insert(c, line(11, ts=1, d=2), now=1)
+        c = invalidate(c, jnp.uint32(11))
+        _, res = local_lookup(c, jnp.uint32(11), now=2)
+        assert not bool(res.hit)
+
+
+class TestFogLookup:
+    def test_max_ts_wins_across_nodes(self):
+        caches = empty_cache(8, 2, 4, batch=(3,))
+
+        def put(caches, node, ln, now):
+            one = jax.tree.map(lambda x: x[node], caches)
+            one, _ = insert(one, ln, now)
+            return jax.tree.map(lambda full, new: full.at[node].set(new), caches, one)
+
+        caches = put(caches, 0, line(42, ts=3, val=3.0), 1)
+        caches = put(caches, 1, line(42, ts=9, val=9.0), 1)
+        caches = put(caches, 2, line(42, ts=5, val=5.0), 1)
+        caches, best, responders = fog_lookup(caches, jnp.uint32(42), now=2)
+        assert bool(best.hit)
+        assert int(best.data_ts) == 9
+        np.testing.assert_allclose(np.asarray(best.data), 9.0)
+        assert np.asarray(responders).sum() == 3
+
+    def test_respond_mask_models_loss(self):
+        caches = empty_cache(8, 2, 4, batch=(2,))
+        one = jax.tree.map(lambda x: x[0], caches)
+        one, _ = insert(one, line(42, ts=3), 1)
+        caches = jax.tree.map(lambda f, n: f.at[0].set(n), caches, one)
+        mask = jnp.array([False, True])  # the only holder's reply is lost
+        _, best, _ = fog_lookup(caches, jnp.uint32(42), now=2, respond_mask=mask)
+        assert not bool(best.hit)
+
+
+class TestBatchInsert:
+    def test_same_set_conflict_order(self):
+        """Two rows hashing to one set in one batch apply in order."""
+        c = empty_cache(1, 1, 4)
+        lines = CacheLine(
+            key=jnp.asarray([1, 2], jnp.uint32),
+            data_ts=jnp.asarray([1, 2], jnp.int32),
+            origin=jnp.asarray([0, 0], jnp.int32),
+            data=jnp.ones((2, 4), jnp.float32),
+            valid=jnp.asarray([True, True]),
+            dirty=jnp.asarray([False, False]),
+        )
+        c, evs = insert_batch(c, lines, now=1)
+        # second insert evicted the first
+        assert bool(evs.valid[1])
+        _, res = local_lookup(c, jnp.uint32(2), now=2)
+        assert bool(res.hit)
+
+    def test_set_index_in_range(self):
+        keys = jnp.arange(1000, dtype=jnp.uint32) * jnp.uint32(2654435761)
+        s = set_index(16, keys)
+        assert int(jnp.min(s)) >= 0 and int(jnp.max(s)) < 16
+
+
+@pytest.mark.parametrize("ways", [1, 2, 4])
+def test_assoc_geometry(ways):
+    c = empty_cache(64 // ways, ways, 4)
+    assert c.capacity == 64

@@ -1,0 +1,117 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _mk_cache(rng, s, w, d, dtype):
+    tags = rng.integers(0, 2**31 - 1, (s, w)).astype(np.int32)
+    ts = rng.integers(0, 10_000, (s, w)).astype(np.int32)
+    valid = rng.random((s, w)) < 0.7
+    data = rng.standard_normal((s, w, d)).astype(dtype)
+    return tags, ts, valid, data
+
+
+@pytest.mark.parametrize("s,w,d,q", [(64, 4, 8, 128), (128, 2, 16, 256), (32, 8, 4, 128)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_flic_lookup_sweep(s, w, d, q, dtype):
+    rng = np.random.default_rng(s * 1000 + w)
+    tags, ts, valid, data = _mk_cache(rng, s, w, d, dtype)
+    keys = np.where(
+        rng.random(q) < 0.6,
+        tags[rng.integers(0, s, q), rng.integers(0, w, q)],
+        rng.integers(0, 2**31 - 1, q),
+    ).astype(np.int32)
+    sidx = rng.integers(0, s, q).astype(np.int32)
+    for i in range(q):  # planted keys must probe their actual set
+        loc = np.argwhere(tags == keys[i])
+        if loc.size:
+            sidx[i] = loc[0][0]
+    h1, t1, p1 = ops.flic_lookup(tags, ts, valid, data, keys, sidx, backend="interpret")
+    h2, t2, p2 = ref.flic_lookup_ref(tags, ts, valid, data, jnp.asarray(keys), jnp.asarray(sidx))
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-6)
+    assert np.asarray(h1).sum() > 0  # sweep actually exercised hits
+
+
+@pytest.mark.parametrize("s,w,d", [(256, 4, 8), (512, 2, 4), (256, 8, 16)])
+def test_flic_merge_sweep(s, w, d):
+    rng = np.random.default_rng(s + w + d)
+    a = _mk_cache(rng, s, w, d, np.float32)
+    b = _mk_cache(rng, s, w, d, np.float32)
+    o1 = ops.flic_merge(*a, *b, backend="interpret")
+    o2 = ref.flic_merge_ref(*a, *b)
+    for x, y in zip(o1, o2):
+        np.testing.assert_allclose(
+            np.asarray(x, dtype=np.float32), np.asarray(y, dtype=np.float32)
+        )
+
+
+@pytest.mark.parametrize(
+    "b,hkv,g,d,page,pages_total,max_pages",
+    [(2, 2, 4, 64, 16, 32, 6), (1, 4, 1, 128, 8, 16, 4), (4, 1, 8, 32, 32, 64, 3)],
+)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_paged_attention_sweep(b, hkv, g, d, page, pages_total, max_pages, dtype):
+    rng = np.random.default_rng(b * 100 + g)
+    q = jnp.asarray(rng.standard_normal((b, hkv, g, d)), dtype)
+    kp = jnp.asarray(rng.standard_normal((pages_total, page, hkv, d)), dtype)
+    vp = jnp.asarray(rng.standard_normal((pages_total, page, hkv, d)), dtype)
+    table = rng.integers(0, pages_total, (b, max_pages)).astype(np.int32)
+    lengths = rng.integers(1, max_pages * page, (b,)).astype(np.int32)
+    a1 = ops.paged_attention(q, kp, vp, table, lengths, backend="interpret")
+    a2 = ref.paged_attention_ref(q, kp, vp, table, lengths)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(a1, np.float32), np.asarray(a2, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("b,c,h,p,n", [(2, 5, 4, 8, 16), (1, 12, 2, 4, 8), (3, 3, 8, 16, 4)])
+def test_ssd_scan_sweep(b, c, h, p, n):
+    rng = np.random.default_rng(c * 10 + h)
+    st = rng.standard_normal((b, c, h, p, n)).astype(np.float32)
+    dec = rng.random((b, c, h)).astype(np.float32)
+    init = rng.standard_normal((b, h, p, n)).astype(np.float32)
+    p1, f1 = ops.ssd_scan(st, dec, init, backend="interpret")
+    p2, f2 = ref.ssd_scan_ref(st, dec, init)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-5, atol=1e-5)
+
+
+def test_ssd_scan_no_init_matches():
+    rng = np.random.default_rng(0)
+    st = rng.standard_normal((1, 4, 2, 4, 4)).astype(np.float32)
+    dec = rng.random((1, 4, 2)).astype(np.float32)
+    p1, f1 = ops.ssd_scan(st, dec, None, backend="interpret")
+    p2, f2 = ref.ssd_scan_ref(st, dec, None)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-5)
+
+
+def test_paged_attention_matches_dense_attention():
+    """Paged result == contiguous attention when pages tile a dense cache."""
+    from repro.models.attention import decode_attention
+
+    rng = np.random.default_rng(1)
+    b, hq, hkv, d, page = 2, 8, 2, 32, 16
+    s = 64
+    q = jnp.asarray(rng.standard_normal((b, 1, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    lengths = np.asarray([40, 64], np.int32)
+
+    dense = decode_attention(q, k, v, jnp.asarray(lengths))  # (B,1,Hq,D)
+
+    n_pages = s // page
+    kp = k.reshape(b * n_pages, page, hkv, d)
+    vp = v.reshape(b * n_pages, page, hkv, d)
+    table = np.arange(b * n_pages, dtype=np.int32).reshape(b, n_pages)
+    qg = q[:, 0].reshape(b, hkv, hq // hkv, d)
+    paged = ops.paged_attention(qg, kp, vp, table, lengths, backend="interpret")
+    np.testing.assert_allclose(
+        np.asarray(paged.reshape(b, 1, hq, d)), np.asarray(dense), rtol=2e-5, atol=2e-5
+    )

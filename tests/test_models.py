@@ -1,0 +1,148 @@
+"""Per-arch smoke tests (reduced configs, real CPU step) + model numerics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ARCH_IDS, get_arch, get_smoke_arch
+from repro.models import (
+    decode_cache_specs,
+    decode_step,
+    init_model,
+    loss_fn,
+    model_param_defs,
+    param_count,
+    prefill,
+)
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=24):
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.full((b, cfg.frontend_seq, cfg.d_model), 0.01, jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.full((b, s, cfg.d_model), 0.01, jnp.bfloat16)
+    batch["labels"] = batch["tokens"]
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_train_step(self, arch):
+        """REQUIRED smoke: reduced config, one forward/train step, shapes + no NaNs."""
+        cfg = get_smoke_arch(arch)
+        params = init_model(RNG, cfg)
+        batch = _batch(cfg)
+        loss, metrics = loss_fn(params, cfg, batch)
+        assert loss.shape == ()
+        assert bool(jnp.isfinite(loss)), f"{arch} loss not finite"
+        grads = jax.grad(lambda p: loss_fn(p, cfg, batch)[0])(params)
+        gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32)))) for g in jax.tree.leaves(grads))
+        assert np.isfinite(gn) and gn > 0, f"{arch} grads degenerate"
+
+    def test_prefill_decode(self, arch):
+        cfg = get_smoke_arch(arch)
+        params = init_model(RNG, cfg)
+        b, s, cap = 2, 16, 32
+        batch = _batch(cfg, b, s)
+        batch.pop("labels")
+        logits, caches = prefill(params, cfg, batch)
+        assert logits.shape == (b, 1, cfg.vocab_size)
+        structs, _ = decode_cache_specs(cfg, b, cap, enc_seq=s)
+        padded = jax.tree.map(
+            lambda spec, arr: jnp.pad(
+                arr.astype(spec.dtype),
+                [(0, st - sa) for st, sa in zip(spec.shape, arr.shape)],
+            ),
+            structs, caches,
+        )
+        plen = s + (cfg.frontend_seq if cfg.family == "vlm" else 0)
+        pos = jnp.full((b,), plen, jnp.int32)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        lg, _ = decode_step(params, cfg, tok, pos, padded)
+        assert lg.shape == (b, 1, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(lg)))
+
+
+FULL_PARAM_TARGETS = {  # billions, from the arch names; tolerance 20%
+    "jamba_1_5_large_398b": 398, "phi3_medium_14b": 14, "granite_8b": 8,
+    "qwen1_5_110b": 110, "granite_3_8b": 8, "deepseek_v2_lite_16b": 16,
+    "qwen3_moe_235b_a22b": 235, "mamba2_370m": 0.37, "internvl2_2b": 2,
+}
+
+
+@pytest.mark.parametrize("arch,target", sorted(FULL_PARAM_TARGETS.items()))
+def test_full_config_param_count(arch, target):
+    n = param_count(model_param_defs(get_arch(arch))) / 1e9
+    assert abs(n - target) / target < 0.20, f"{arch}: {n:.2f}B vs {target}B"
+
+
+def test_flash_matches_full_attention():
+    from repro.models.attention import flash_attention, full_attention
+
+    rng = np.random.default_rng(0)
+    b, sq, hq, hkv, d = 2, 2048, 4, 2, 32
+    q = jnp.asarray(rng.standard_normal((b, sq, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, sq, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, sq, hkv, d)), jnp.float32)
+    o1 = flash_attention(q, k, v, causal=True)
+    o2 = full_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_mla_vdim():
+    """flash path with v head_dim != q head_dim (MLA geometry)."""
+    from repro.models.attention import flash_attention, full_attention
+
+    rng = np.random.default_rng(1)
+    b, sq, h, dq, dv = 1, 2048, 2, 24, 16
+    q = jnp.asarray(rng.standard_normal((b, sq, h, dq)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, sq, h, dq)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, sq, h, dv)), jnp.float32)
+    o1 = flash_attention(q, k, v, causal=True)
+    o2 = full_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_prefill_continuation():
+    """Greedy decode after prefill == teacher-forced forward (dense arch)."""
+    cfg = get_smoke_arch("granite_8b")
+    params = init_model(RNG, cfg)
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, cfg.vocab_size, (1, 12))
+    logits_full, _ = prefill(params, cfg, {"tokens": jnp.asarray(toks[:, :12], jnp.int32)})
+    # decode the 12th token using an 11-token prefill
+    logits_p, caches = prefill(params, cfg, {"tokens": jnp.asarray(toks[:, :11], jnp.int32)})
+    structs, _ = decode_cache_specs(cfg, 1, 16)
+    padded = jax.tree.map(
+        lambda spec, arr: jnp.pad(
+            arr.astype(spec.dtype),
+            [(0, st - sa) for st, sa in zip(spec.shape, arr.shape)],
+        ),
+        structs, caches,
+    )
+    lg, _ = decode_step(
+        params, cfg, jnp.asarray([[toks[0, 11]]], jnp.int32),
+        jnp.asarray([11], jnp.int32), padded,
+    )
+    np.testing.assert_allclose(
+        np.asarray(lg[0, 0]), np.asarray(logits_full[0, -1]), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_moe_aux_loss_uniform_router_is_one():
+    """With near-uniform routing the load-balance loss approaches 1."""
+    from repro.models.moe import moe_forward
+    from repro.models.params import init_params
+    from repro.models import moe as moe_mod
+
+    cfg = get_smoke_arch("qwen3_moe_235b_a22b")
+    defs = moe_mod.moe_defs(cfg, jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), defs)
+    params["router"] = params["router"] * 0.0  # uniform logits
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    _, aux = moe_forward(params, cfg, x)
+    assert abs(float(aux) - 1.0) < 0.05

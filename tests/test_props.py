@@ -1,0 +1,218 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CacheLine,
+    empty_cache,
+    exact_total_loss_prob,
+    insert,
+    local_lookup,
+    markov_loss_bound,
+)
+from repro.core.cache_state import occupancy
+from repro.core import writeback as wb
+from repro.kernels import ref
+
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Cache invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    keys=st.lists(st.integers(1, 2**31 - 1), min_size=1, max_size=40),
+    sets=st.sampled_from([1, 2, 4]),
+    ways=st.sampled_from([1, 2, 4]),
+)
+def test_occupancy_bounded_and_ts_monotone(keys, sets, ways):
+    """(1) occupancy never exceeds capacity; (2) a key's visible data_ts
+    never decreases (soft-coherence monotonicity)."""
+    c = empty_cache(sets, ways, 2)
+    seen_ts: dict[int, int] = {}
+    for t, k in enumerate(keys):
+        ln = CacheLine(
+            key=jnp.uint32(k), data_ts=jnp.int32(t), origin=jnp.int32(0),
+            data=jnp.zeros((2,), jnp.float32), valid=jnp.asarray(True),
+            dirty=jnp.asarray(False),
+        )
+        c, _ = insert(c, ln, now=t)
+        assert int(occupancy(c)) <= sets * ways
+        _, res = local_lookup(c, jnp.uint32(k), now=t)
+        if bool(res.hit):
+            prev = seen_ts.get(k, -1)
+            assert int(res.data_ts) >= prev
+            seen_ts[k] = int(res.data_ts)
+
+
+@settings(**SETTINGS)
+@given(
+    data=st.data(),
+    sets=st.sampled_from([2, 4]),
+)
+def test_lru_among_resident(data, sets):
+    """After any op sequence, each set retains its most-recently-USED lines."""
+    ways = 2
+    c = empty_cache(sets, ways, 2)
+    last_use: dict[int, int] = {}
+    n_ops = data.draw(st.integers(5, 30))
+    for t in range(n_ops):
+        k = data.draw(st.integers(1, 12)) * 7919
+        if data.draw(st.booleans()):
+            ln = CacheLine(
+                key=jnp.uint32(k), data_ts=jnp.int32(t), origin=jnp.int32(0),
+                data=jnp.zeros((2,), jnp.float32), valid=jnp.asarray(True),
+                dirty=jnp.asarray(False),
+            )
+            c, ev = insert(c, ln, now=t)
+            last_use[k] = t
+            if bool(ev.valid):
+                last_use.pop(int(np.uint32(ev.key)), None)
+        else:
+            c, res = local_lookup(c, jnp.uint32(k), now=t)
+            if bool(res.hit):
+                last_use[k] = t
+    # every key tracked as resident must still hit
+    for k in last_use:
+        _, res = local_lookup(c, jnp.uint32(k), now=n_ops + 1)
+        assert bool(res.hit), f"resident key {k} lost"
+
+
+# ---------------------------------------------------------------------------
+# Soft-coherence merge properties (kernel-level semantics)
+# ---------------------------------------------------------------------------
+
+def _rand_cache(rng, s, w, d):
+    return (
+        rng.integers(0, 100, (s, w)).astype(np.int32),
+        rng.integers(0, 50, (s, w)).astype(np.int32),
+        rng.random((s, w)) < 0.7,
+        rng.standard_normal((s, w, d)).astype(np.float32),
+    )
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000))
+def test_merge_idempotent_and_newest_wins(seed):
+    rng = np.random.default_rng(seed)
+    a = _rand_cache(rng, 4, 2, 3)
+    b = _rand_cache(rng, 4, 2, 3)
+    m1 = ref.flic_merge_ref(*a, *b)
+    # idempotence: merging the result with B again changes nothing
+    m2 = ref.flic_merge_ref(*m1, *b)
+    for x, y in zip(m1, m2):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # newest-wins: output ts >= both inputs' ts wherever both valid
+    ts_a, va = a[1], a[2]
+    ts_b, vb = b[1], b[2]
+    both = va & vb
+    out_ts = np.asarray(m1[1])
+    assert np.all(out_ts[both] >= np.maximum(ts_a, ts_b)[both] - 0)  # >= max? newest-wins picks max
+    assert np.all(out_ts[both] == np.maximum(ts_a, ts_b)[both])
+
+
+# ---------------------------------------------------------------------------
+# Paper §II-B loss bound
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    p=st.floats(0.0, 1.0, allow_nan=False),
+    n=st.integers(2, 500),
+)
+def test_markov_bound_dominates_exact(p, n):
+    assert markov_loss_bound(p, n) >= exact_total_loss_prob(p, n) - 1e-12
+
+
+def test_bound_decreases_with_fog_size():
+    vals = [markov_loss_bound(0.1, n) for n in (2, 5, 10, 100)]
+    assert vals == sorted(vals, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# Write-behind queue: FIFO exactness + token-bucket rate cap
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n_ticks=st.integers(1, 60),
+    arrivals=st.integers(1, 8),
+    rate=st.floats(0.2, 3.0),
+)
+def test_writer_rate_cap_and_fifo(n_ticks, arrivals, rate):
+    q = wb.empty_queue(4096)
+    drained = 0
+    calls = 0
+    for t in range(n_ticks):
+        keys = jnp.arange(arrivals, dtype=jnp.uint32) + t * arrivals
+        q, _ = wb.enqueue(q, keys, keys.astype(jnp.int32), keys.astype(jnp.int32),
+                          jnp.ones((arrivals,), bool))
+        q, n, c = wb.drain(q, t, jnp.asarray(True), rate, 10.0, max_per_tick=16)
+        drained += int(n)
+        calls += int(c)
+        assert int(q.size()) >= 0
+    # API calls can never exceed the token budget
+    assert calls <= int(rate * n_ticks) + 10 + 1
+    # FIFO: drained head never passes tail
+    assert drained <= n_ticks * arrivals
+
+
+def test_writer_backoff_on_failure():
+    q = wb.empty_queue(64)
+    q, _ = wb.enqueue(q, jnp.asarray([1], jnp.uint32), jnp.asarray([0]),
+                      jnp.asarray([0]), jnp.asarray([True]))
+    q, n, _ = wb.drain(q, 0, jnp.asarray(False), 5.0, 10.0, 8)
+    assert int(n) == 0 and int(q.backoff) >= 1
+    first_backoff = int(q.backoff)
+    q, n, _ = wb.drain(q, int(q.next_retry), jnp.asarray(False), 5.0, 10.0, 8)
+    assert int(q.backoff) == min(first_backoff * 2, 64)  # binary exponential
+    # store heals -> drains
+    q, n, _ = wb.drain(q, int(q.next_retry) + 1, jnp.asarray(True), 5.0, 10.0, 8)
+    assert int(n) == 1
+
+
+@settings(**SETTINGS)
+@given(cap=st.integers(2, 16), burst=st.integers(1, 40))
+def test_queue_overflow_drops_counted(cap, burst):
+    q = wb.empty_queue(cap)
+    keys = jnp.arange(burst, dtype=jnp.uint32)
+    q, acc = wb.enqueue(q, keys, keys.astype(jnp.int32), keys.astype(jnp.int32),
+                        jnp.ones((burst,), bool))
+    assert int(acc) == min(cap, burst)
+    assert int(q.dropped) == max(0, burst - cap)
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression properties
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 1000), kfrac=st.floats(0.05, 1.0))
+def test_topk_error_feedback_conserves_mass(seed, kfrac):
+    from repro.optim import compress_topk, decompress_topk
+
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((64,)).astype(np.float32))
+    vals, idx, err = compress_topk(g, kfrac)
+    recon = decompress_topk(vals, idx, g.shape)
+    # transmitted + residual == original (error feedback is lossless in sum)
+    np.testing.assert_allclose(np.asarray(recon + err), np.asarray(g), rtol=1e-6, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 1000))
+def test_int8_quantize_bounded_error(seed):
+    from repro.optim import int8_dequantize, int8_quantize
+
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((256,)).astype(np.float32))
+    q, scale = int8_quantize(g)
+    err = np.abs(np.asarray(int8_dequantize(q, scale) - g))
+    assert err.max() <= float(scale) * 0.5 + 1e-6

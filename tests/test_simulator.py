@@ -1,0 +1,129 @@
+"""End-to-end fog simulation tests: the paper's headline claims + dynamics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, run_sim, summarize
+from repro.core.backing_store import StoreProfile
+
+
+@pytest.fixture(scope="module")
+def headline():
+    """Paper configuration: 50 nodes, 200-line caches, sheets-like store."""
+    cfg = SimConfig(n_nodes=50, cache_lines=200, loss_prob=0.01)
+    _, series = run_sim(cfg, 1200, seed=0)
+    return summarize(series)
+
+
+class TestHeadlineClaims:
+    def test_miss_rate_below_2pct(self, headline):
+        """Abstract: 'less than 2% miss rate on reads'."""
+        assert headline["read_miss_ratio"] < 0.02
+
+    def test_sync_store_requests_below_5pct(self, headline):
+        """Abstract: 'only 5% of requests needing the backing store'."""
+        assert headline["sync_store_request_ratio"] < 0.05
+
+    def test_wan_reduction_above_50pct(self, headline):
+        """Abstract: '>50% reduction in bytes transmitted per second'."""
+        assert headline["wan_reduction_vs_baseline"] > 0.50
+
+    def test_writer_keeps_up(self, headline):
+        assert headline["final_queue_depth"] < 500
+        assert headline["queue_dropped"] == 0
+
+
+class TestScaling:
+    def test_miss_ratio_decreases_with_fog_size(self):
+        """Fig. 4: miss ratio drops as the fog grows (cache fixed at 200)."""
+        misses = []
+        for n in (5, 10, 25, 50):
+            cfg = SimConfig(n_nodes=n, cache_lines=200, loss_prob=0.01)
+            _, series = run_sim(cfg, 800, seed=1)
+            misses.append(summarize(series)["read_miss_ratio"])
+        assert misses[0] > misses[-1]
+        assert misses[-1] < 0.02
+
+    def test_wan_bytes_decrease_with_cache_size(self):
+        """Fig. 3: WAN B/s falls as per-node cache grows (50 nodes)."""
+        rates = []
+        for lines in (24, 48, 96, 200):
+            cfg = SimConfig(n_nodes=50, cache_lines=lines, loss_prob=0.01)
+            _, series = run_sim(cfg, 600, seed=2)
+            rates.append(summarize(series)["wan_bytes_per_tick"])
+        assert rates[0] > rates[-1]
+
+    def test_txn_size_decreases_with_cache_size(self):
+        """Fig. 5: average store transaction size falls as caches grow."""
+        sizes = []
+        for lines in (24, 96, 200):
+            cfg = SimConfig(n_nodes=50, cache_lines=lines, loss_prob=0.01)
+            _, series = run_sim(cfg, 600, seed=3)
+            sizes.append(summarize(series)["avg_store_txn_bytes"])
+        assert sizes[0] > sizes[-1]
+
+
+class TestRobustness:
+    def test_higher_loss_higher_miss(self):
+        cfgs = [dataclasses.replace(SimConfig(), loss_prob=p) for p in (0.0, 0.3)]
+        outs = [summarize(run_sim(c, 400, seed=4)[1])["read_miss_ratio"] for c in cfgs]
+        assert outs[1] > outs[0]
+
+    def test_replicate_policy_runs(self):
+        cfg = SimConfig(n_nodes=10, cache_lines=64, insert_policy="replicate")
+        _, series = run_sim(cfg, 200, seed=5)
+        s = summarize(series)
+        assert s["reads"] > 0
+
+    def test_gilbert_elliott_channel(self):
+        cfg = SimConfig(n_nodes=10, cache_lines=64, loss_model="gilbert_elliott")
+        _, series = run_sim(cfg, 200, seed=6)
+        assert summarize(series)["read_miss_ratio"] < 0.5
+
+    def test_db_store_profile(self):
+        db = SimConfig(store=StoreProfile(kind="db"))
+        sheets = SimConfig(store=StoreProfile(kind="sheets"))
+        s_db = summarize(run_sim(db, 300, seed=7)[1])
+        s_sh = summarize(run_sim(sheets, 300, seed=7)[1])
+        # row-granular reads vs full-table reads: order(s)-of-magnitude gap
+        assert s_db["avg_store_txn_bytes"] < s_sh["avg_store_txn_bytes"] / 5
+        assert s_db["wan_rx_bytes_per_tick"] < s_sh["wan_rx_bytes_per_tick"] / 5
+
+    def test_determinism(self):
+        cfg = SimConfig(n_nodes=8, cache_lines=32)
+        a = summarize(run_sim(cfg, 150, seed=9)[1])
+        b = summarize(run_sim(cfg, 150, seed=9)[1])
+        assert a == b
+
+
+def test_store_outage_recovery():
+    """Paper §VI: if the backing store fails, FLIC queues writes, keeps
+    serving reads from the fog, and drains after recovery."""
+    from repro.core import backing_store as bs
+    from repro.core.simulator import init_sim, sim_tick
+
+    cfg = SimConfig(n_nodes=10, cache_lines=64, loss_prob=0.0)
+    state = init_sim(cfg)
+    step = jax.jit(lambda s: sim_tick(cfg, s))
+
+    depths, drained, misses, reads = [], [], [], []
+    for t in range(120):
+        if t == 30:  # 40-tick outage
+            state = dataclasses.replace(
+                state, store=bs.inject_outage(state.store, t, 40)
+            )
+        state, m = step(state)
+        depths.append(int(m.queue_depth))
+        drained.append(int(m.writes_drained))
+        misses.append(int(m.misses))
+        reads.append(int(m.reads))
+    # queue grows during the outage...
+    assert max(depths[30:70]) > depths[29]
+    # ...reads keep being served by the fog (no miss spike)
+    assert sum(misses[30:70]) <= max(1, sum(reads[30:70]) // 10)
+    # ...and the writer catches up after recovery
+    assert depths[-1] < max(depths[30:70])
+    assert sum(drained[70:]) > 0
