@@ -27,6 +27,13 @@ def main() -> None:
     from benchmarks.kernels_bench import bench_kernels
     bench_kernels()
 
+    from benchmarks.sim_bench import bench_sim
+    bench_sim(
+        ticks=int(600 * scale),
+        # quick mode skips N=500: the reference engine alone needs ~80 s there
+        node_counts=(50, 200) if quick else (50, 200, 500),
+    )
+
     from benchmarks.roofline import emit_table
     rows = emit_table()
     if not rows:

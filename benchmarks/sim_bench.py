@@ -1,0 +1,75 @@
+"""Simulator throughput benchmark: old (reference) path vs fused engine.
+
+Measures steady-state ticks/sec of ``run_sim`` at N ∈ {50, 200, 500} on the
+directory-policy paper workload, for both engines, and emits
+``BENCH_sim.json`` (plus harness CSV lines via ``benchmarks.common.emit``).
+
+The N=200 / 600-tick directory config is the acceptance gate for the fused
+engine: it must clear a 3x speedup on the same host (ISSUE 1 /
+DESIGN.md §3); ``tests/test_sim_equivalence.py`` separately proves the two
+engines emit identical metrics, so this is a pure implementation race.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.sim_bench [--quick]``
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import jax
+
+from repro.core.simulator import SimConfig, run_sim
+from benchmarks.common import emit
+
+NODE_COUNTS = (50, 200, 500)
+TICKS = 600
+
+
+def _time_run(cfg: SimConfig, ticks: int, engine: str) -> float:
+    """Hot wall-seconds for one run (compile excluded via a warmup run)."""
+    _, series = run_sim(cfg, ticks, seed=0, engine=engine)
+    jax.block_until_ready(series.reads)
+    t0 = time.perf_counter()
+    _, series = run_sim(cfg, ticks, seed=1, engine=engine)
+    jax.block_until_ready(series.reads)
+    return time.perf_counter() - t0
+
+
+def bench_sim(ticks: int = TICKS, node_counts=NODE_COUNTS,
+              out_path: str = "BENCH_sim.json") -> dict:
+    results = {"ticks": ticks, "configs": []}
+    for n in node_counts:
+        cfg = SimConfig(n_nodes=n, cache_lines=200, insert_policy="directory")
+        row = {"n_nodes": n}
+        for engine in ("reference", "fused"):
+            secs = _time_run(cfg, ticks, engine)
+            rate = ticks / secs
+            row[f"{engine}_ticks_per_s"] = rate
+            emit(
+                f"sim.{engine}.n{n}", 1e6 * secs / ticks,
+                f"ticks_per_s={rate:.1f}",
+            )
+        row["speedup"] = row["fused_ticks_per_s"] / row["reference_ticks_per_s"]
+        emit(f"sim.speedup.n{n}", 0.0, f"x{row['speedup']:.2f}")
+        results["configs"].append(row)
+
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    res = bench_sim(
+        ticks=150 if quick else TICKS,
+        node_counts=(50, 200) if quick else NODE_COUNTS,
+    )
+    gate = next((r for r in res["configs"] if r["n_nodes"] == 200), None)
+    if gate is not None and not quick:
+        assert gate["speedup"] >= 3.0, f"fused engine regressed: {gate}"
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

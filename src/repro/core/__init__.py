@@ -15,7 +15,15 @@ code and a slow cloud backing store:
 * ``distributed`` — the pod-scale embodiment under ``shard_map``.
 """
 from repro.core.cache_state import CacheLine, CacheState, empty_cache, null_line
-from repro.core.flic import LookupResult, fog_lookup, insert, insert_batch, local_lookup
+from repro.core.flic import (
+    LookupResult,
+    fog_lookup,
+    insert,
+    insert_batch,
+    insert_rows,
+    local_lookup,
+    lookup_rows,
+)
 from repro.core.coherence import (
     bernoulli_loss_mask,
     exact_total_loss_prob,
@@ -34,7 +42,9 @@ __all__ = [
     "fog_lookup",
     "insert",
     "insert_batch",
+    "insert_rows",
     "local_lookup",
+    "lookup_rows",
     "bernoulli_loss_mask",
     "exact_total_loss_prob",
     "markov_loss_bound",

@@ -19,7 +19,10 @@ enqueued rows.  Membership of a (tick, node) datum is then an integer
 comparison against its enqueue index — exact, with static shapes.
 
 Failures: a deterministic outage schedule (for tests) plus an optional
-PRNG-driven outage chain (for robustness runs).
+PRNG-driven outage chain (for robustness runs).  While an outage is active
+(``store_healthy`` False) the simulator attempts NO synchronous store
+reads — readers fall back to the writer's ring (DESIGN.md §2) — and the
+writer backs off; recovery drains the backlog FIFO.
 """
 from __future__ import annotations
 

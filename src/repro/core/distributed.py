@@ -77,9 +77,11 @@ def fog_shard_tick(
       * 1× psum of per-query response records           — soft-coherence merge;
       * scalar psums for metrics.
     """
-    ndev = jax.lax.axis_size(axis)
-    rank = jax.lax.axis_index(axis)
+    # Static axis size from the shard shape (jax.lax.axis_size is not
+    # available on every supported JAX version, and shapes need it static).
     n_local = state.caches.tags.shape[0]
+    ndev = cfg.n_nodes // n_local
+    rank = jax.lax.axis_index(axis)
     n_total = ndev * n_local
     t = state.tick
     node_ids = rank * n_local + jnp.arange(n_local, dtype=jnp.int32)

@@ -148,6 +148,137 @@ def insert_batch(
     return jax.lax.scan(step, cache, lines)
 
 
+# --------------------------------------------------------------------------
+# Batched (per-node) primitives: one line / one key per cache, fully fused.
+#
+# These are the hot-path versions of ``insert`` / ``local_lookup`` for a
+# *batched* ``CacheState`` with leading node axis N: each node i upserts or
+# probes its own lane i.  Per field this lowers to ONE gather of the probed
+# set row and ONE one-hot scatter — no vmap-of-scalar chains (DESIGN.md §3).
+# Semantics match ``insert``/``local_lookup`` exactly: first-matching-way on
+# hit, first-invalid-else-LRU victim, strictly-newer timestamp overwrites.
+# --------------------------------------------------------------------------
+
+def _gather_rows(field: jax.Array, sidx: jax.Array) -> jax.Array:
+    """field (N, S, W[, D]), sidx (N,) -> the probed set row (N, W[, D])."""
+    idx = sidx.reshape(sidx.shape + (1,) * (field.ndim - 1))
+    return jnp.take_along_axis(field, idx, axis=1)[:, 0]
+
+
+def _select_way_rows(tags_r, valid_r, use_r, keys):
+    """Vectorized ``_select_way`` over a leading batch axis.
+
+    Inputs are gathered set rows (N, W) and keys (N,); returns
+    (way, present) with the scalar routine's exact tie-breaks.
+    """
+    match = valid_r & (tags_r == keys[:, None])
+    present = jnp.any(match, axis=1)
+    present_way = jnp.argmax(match, axis=1)           # first matching way
+    any_invalid = jnp.any(~valid_r, axis=1)
+    invalid_way = jnp.argmax(~valid_r, axis=1)        # first invalid way
+    use = jnp.where(valid_r, use_r, jnp.iinfo(jnp.int32).max)
+    lru_way = jnp.argmin(use, axis=1)
+    victim_way = jnp.where(any_invalid, invalid_way, lru_way)
+    return jnp.where(present, present_way, victim_way), present
+
+
+def insert_rows(
+    caches: CacheState, lines: CacheLine, now: jax.Array
+) -> tuple[CacheState, CacheLine]:
+    """Upsert one line per node across a batched cache (leading axis N).
+
+    Equivalent to ``jax.vmap(insert)(caches, lines)`` but built from one
+    gather + one one-hot scatter per field.  Returns (caches, evictions)
+    with evictions batched over N; masked lanes (``lines.valid`` False) are
+    no-ops, exactly like the scalar path.
+    """
+    n = caches.tags.shape[0]
+    keys = jnp.asarray(lines.key, jnp.uint32)
+    now = jnp.asarray(now, jnp.int32)
+    sidx = (keys % jnp.uint32(caches.num_sets)).astype(jnp.int32)   # (N,)
+
+    tags_r = _gather_rows(caches.tags, sidx)          # (N, W)
+    valid_r = _gather_rows(caches.valid, sidx)
+    use_r = _gather_rows(caches.last_use, sidx)
+    way, present = _select_way_rows(tags_r, valid_r, use_r, keys)
+
+    rows = jnp.arange(n)
+    old_ts = caches.data_ts[rows, sidx, way]
+    old_valid = valid_r[rows, way]
+    line_ts = jnp.asarray(lines.data_ts, jnp.int32)
+    stale_incoming = present & (line_ts <= old_ts)
+    do_write = jnp.asarray(lines.valid) & ~stale_incoming
+
+    displaced = do_write & ~present & old_valid
+    evicted = CacheLine(
+        key=jnp.where(displaced, tags_r[rows, way], NULL_TAG),
+        data_ts=jnp.where(displaced, old_ts, -1),
+        origin=jnp.where(displaced, caches.origin[rows, sidx, way], -1),
+        data=jnp.where(
+            displaced[:, None], caches.data[rows, sidx, way],
+            jnp.zeros_like(lines.data),
+        ),
+        valid=displaced,
+        dirty=displaced & caches.dirty[rows, sidx, way],
+    )
+
+    # Masked scatter: route no-op lanes to an out-of-bounds set (dropped).
+    s = jnp.where(do_write, sidx, caches.num_sets)
+
+    def wr(field, value):
+        return field.at[rows, s, way].set(value.astype(field.dtype), mode="drop")
+
+    caches = CacheState(
+        tags=wr(caches.tags, keys),
+        data_ts=wr(caches.data_ts, line_ts),
+        ins_ts=wr(caches.ins_ts, jnp.full((n,), now)),
+        origin=wr(caches.origin, jnp.asarray(lines.origin, jnp.int32)),
+        valid=wr(caches.valid, jnp.ones((n,), bool)),
+        dirty=wr(caches.dirty, jnp.asarray(lines.dirty)),
+        last_use=wr(caches.last_use, jnp.full((n,), now)),
+        data=caches.data.at[rows, s, way].set(lines.data, mode="drop"),
+    )
+    return caches, evicted
+
+
+def lookup_rows(
+    caches: CacheState, keys: jax.Array, now: jax.Array, update_lru: bool = True
+) -> tuple[CacheState, LookupResult]:
+    """Probe one key per node across a batched cache (leading axis N).
+
+    Equivalent to ``jax.vmap(local_lookup)`` with one gather per field and a
+    single one-hot LRU scatter.
+    """
+    n = caches.tags.shape[0]
+    keys = jnp.asarray(keys, jnp.uint32)
+    sidx = (keys % jnp.uint32(caches.num_sets)).astype(jnp.int32)
+    tags_r = _gather_rows(caches.tags, sidx)
+    valid_r = _gather_rows(caches.valid, sidx)
+    match = valid_r & (tags_r == keys[:, None])
+    hit = jnp.any(match, axis=1)
+    way = jnp.argmax(match, axis=1)
+
+    rows = jnp.arange(n)
+    res = LookupResult(
+        hit=hit,
+        data_ts=jnp.where(hit, caches.data_ts[rows, sidx, way], -1),
+        origin=jnp.where(hit, caches.origin[rows, sidx, way], -1),
+        data=jnp.where(
+            hit[:, None], caches.data[rows, sidx, way],
+            jnp.zeros_like(caches.data[rows, sidx, way]),
+        ),
+    )
+    if update_lru:
+        s = jnp.where(hit, sidx, caches.num_sets)
+        caches = dataclasses.replace(
+            caches,
+            last_use=caches.last_use.at[rows, s, way].set(
+                jnp.full((n,), jnp.asarray(now, jnp.int32)), mode="drop"
+            ),
+        )
+    return caches, res
+
+
 def invalidate(cache: CacheState, key: jax.Array) -> CacheState:
     """Drop a key if present (used by serving page-free paths)."""
     key = jnp.asarray(key, jnp.uint32)
@@ -179,7 +310,9 @@ def fog_lookup(
     LRU is refreshed on every responder that hit, mirroring a served read.
     """
     n = caches.tags.shape[0]
-    caches, results = jax.vmap(local_lookup, in_axes=(0, None, None))(caches, key, now)
+    caches, results = lookup_rows(
+        caches, jnp.full((n,), jnp.asarray(key, jnp.uint32)), now
+    )
     hits = results.hit
     if respond_mask is not None:
         hits = hits & respond_mask

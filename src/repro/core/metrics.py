@@ -18,20 +18,23 @@ class TickMetrics:
     reads: jax.Array             # read requests issued this tick
     hits_local: jax.Array
     hits_fog: jax.Array
-    misses: jax.Array            # missed fog entirely -> went to the store
+    misses: jax.Array            # missed fog entirely -> needed the store
     store_found: jax.Array       # store reads that found the row
     store_missing: jax.Array     # store reads for rows not yet durable
     writes_gen: jax.Array        # rows generated this tick
     writes_drained: jax.Array    # rows flushed to the store this tick
-    queue_depth: jax.Array
-    queue_dropped: jax.Array
+    queue_depth: jax.Array       # GAUGE: depth at end of tick (not additive)
+    queue_dropped: jax.Array     # cumulative counter (not additive)
     store_txn_bytes: jax.Array   # sum of store transaction sizes this tick
     store_txns: jax.Array        # number of store transactions this tick
     read_latency_sum: jax.Array  # modeled latency over this tick's reads
     baseline_wan_bytes: jax.Array  # no-FLIC WAN bytes (direct store ops)
+    hits_queue: jax.Array        # reads served by the writer's pending buffer
+    ticks: jax.Array             # ticks aggregated into this row (1, or
+    #                              ``metrics_every`` for thinned series)
 
     @staticmethod
-    def zeros() -> "TickMetrics":
+    def zeros(ticks: int = 1) -> "TickMetrics":
         f = jnp.float32(0.0)
         i = jnp.int32(0)
         return TickMetrics(
@@ -42,13 +45,30 @@ class TickMetrics:
             queue_depth=i, queue_dropped=i,
             store_txn_bytes=f, store_txns=i,
             read_latency_sum=f, baseline_wan_bytes=f,
+            hits_queue=i, ticks=jnp.int32(ticks),
         )
+
+
+# Fields whose per-tick value is a level, not a flow: windowed aggregation
+# (``run_sim(..., metrics_every=k)``) keeps the LAST value instead of the sum.
+GAUGE_FIELDS = ("queue_depth", "queue_dropped")
+
+
+def accumulate(agg: TickMetrics, m: TickMetrics) -> TickMetrics:
+    """Fold one tick's metrics into a window aggregate (sum flows, last
+    gauges) so a ``metrics_every``-thinned series summarizes exactly."""
+    out = jax.tree.map(lambda a, b: a + b, agg, m)
+    return dataclasses.replace(
+        out, **{f: getattr(m, f) for f in GAUGE_FIELDS}
+    )
 
 
 def summarize(series: TickMetrics) -> dict:
     """Aggregate a stacked TickMetrics time-series into headline numbers."""
     tot = jax.tree.map(lambda x: jnp.sum(x, axis=0), series)
-    ticks = series.reads.shape[0]
+    # With metrics_every > 1 each row aggregates several ticks; the per-row
+    # ``ticks`` field keeps rate denominators exact either way.
+    ticks = int(tot.ticks)
     reads = jnp.maximum(tot.reads, 1)
     wan = tot.wan_tx_bytes + tot.wan_rx_bytes
     out = {
@@ -57,6 +77,7 @@ def summarize(series: TickMetrics) -> dict:
         "read_miss_ratio": float(tot.misses / reads),
         "hit_local_ratio": float(tot.hits_local / reads),
         "hit_fog_ratio": float(tot.hits_fog / reads),
+        "hit_queue_ratio": float(tot.hits_queue / reads),
         "wan_bytes_per_tick": float(wan / ticks),
         "wan_tx_bytes_per_tick": float(tot.wan_tx_bytes / ticks),
         "wan_rx_bytes_per_tick": float(tot.wan_rx_bytes / ticks),

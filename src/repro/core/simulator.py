@@ -18,30 +18,43 @@ Workload model (from §III-B, with ambiguities resolved — see DESIGN.md §2):
 * Reads: every ``read_period`` ticks (staggered by node id), a node samples
   a key uniformly from its directory — the last ``read_window_keys`` keys it
   heard fog-wide, i.e. ages ~ U[0, window_keys/N] ticks ("preferentially
-  reading recent data", §III-B).  Read path: local -> fog broadcast -> store.
-  Fills on fog/store hits land in the reader's local cache.
+  reading recent data", §III-B).  Read path: local -> fog broadcast ->
+  writer buffer -> store.  Fills on fog/store hits land in the reader's
+  local cache.
 * The store holds exactly the first ``drained_total`` enqueued rows (FIFO
   single writer), so durability of row (t, n) is the integer test
   ``t*N + n < drained_total``.  (Exact while the ring never overflows; with
   injected outages the tiny overflow tail is counted in ``queue_dropped``.)
+* Fault tolerance (§VI): rows still pending in the writer's ring are
+  readable from the fog (store-to-load forwarding on the paper's
+  "load-store buffer"); while the store is DOWN the writer also forwards
+  already-drained rows that remain physically resident in its ring, and
+  synchronous store reads are not attempted (the store is unreachable).
 
-The function is pure; everything (losses, outages, workload) is driven by a
-single PRNG key, so runs are exactly reproducible.
+This module holds the FUSED engine (DESIGN.md §3): one batched probe serves
+the local-hit check, the fog broadcast query, and the responder LRU-touch
+scatter; inserts are the batched ``insert_rows`` primitive; the per-tick
+coherence-update pass is skipped because workload keys are write-once (the
+reference engine in ``simulator_ref.py`` retains the seed's per-pass
+structure, and ``tests/test_sim_equivalence.py`` proves both emit identical
+metrics).  The function is pure; everything (losses, outages, workload) is
+driven by a single PRNG key, so runs are exactly reproducible.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import backing_store as bs
 from repro.core import writeback as wb
-from repro.core.cache_state import CacheLine, CacheState, empty_cache
+from repro.core.cache_state import NULL_TAG, CacheLine, CacheState, empty_cache
 from repro.core.coherence import GilbertElliott, bernoulli_loss_mask, gilbert_elliott_step
-from repro.core.metrics import TickMetrics
+from repro.core.flic import insert_rows
+from repro.core.metrics import TickMetrics, accumulate
 from repro.utils.hashing import hash2_u32
 
 
@@ -63,6 +76,12 @@ class SimConfig:
     queue_capacity: int = 8192
     writer_max_per_tick: int = 64
     store: bs.StoreProfile = dataclasses.field(default_factory=bs.StoreProfile)
+    # Fog-probe backend (DESIGN.md §4): None/"fused" = inline jnp gathers;
+    # "xla" | "interpret" | "pallas" dispatch through repro.kernels.ops.
+    # NB: the kernel backends break soft-coherence ties by max-data_ts way,
+    # the inline path by first-matching-way — identical on any state
+    # reachable via insert/insert_rows (one copy of a key per set).
+    probe_backend: Optional[str] = None
     # Modeled latency terms (ticks == seconds), for the Fig. 2 reproduction.
     lat_local: float = 1e-4
     lat_lan_base: float = 2e-3
@@ -78,6 +97,12 @@ class SimConfig:
     @property
     def window_ticks(self) -> int:
         return max(1, round(self.read_window_keys / self.n_nodes))
+
+    @property
+    def readers_per_tick(self) -> int:
+        """Static bound on simultaneous readers (the staggered schedule
+        activates exactly the nodes ≡ -t (mod read_period))."""
+        return -(-self.n_nodes // self.read_period)
 
 
 @jax.tree_util.register_dataclass
@@ -128,6 +153,58 @@ def _delivery_mask(cfg: SimConfig, channel, rng, shape):
     return channel, mask
 
 
+def _gen_rows(cfg: SimConfig, t: jax.Array, node_ids: jax.Array) -> CacheLine:
+    """One fresh row per node: key = hash(tick, node), payload from the key."""
+    n = cfg.n_nodes
+    keys = hash2_u32(jnp.full((n,), t, jnp.uint32), node_ids.astype(jnp.uint32))
+    return CacheLine(
+        key=keys,
+        data_ts=jnp.full((n,), t, jnp.int32),
+        origin=node_ids,
+        data=_payload_for(keys, cfg.payload_dim),
+        valid=jnp.ones((n,), bool),
+        dirty=jnp.zeros((n,), bool),  # write-through-behind: enqueued below
+    )
+
+
+def _read_draws(cfg: SimConfig, t, k_age, k_src, node_ids):
+    """The tick's read workload (same PRNG consumption on every engine)."""
+    n = cfg.n_nodes
+    reading = ((t + node_ids) % cfg.read_period == 0) & (t > 0)
+    window = jnp.minimum(jnp.int32(cfg.window_ticks), jnp.maximum(t, 1))
+    ages = jax.random.randint(k_age, (n,), 0, window, dtype=jnp.int32)
+    ages = jnp.minimum(ages, t)  # only existing data
+    src = jax.random.randint(k_src, (n,), 0, n, dtype=jnp.int32)
+    r_tick = t - ages
+    r_keys = hash2_u32(r_tick.astype(jnp.uint32), src.astype(jnp.uint32))
+    return reading, src, r_tick, r_keys
+
+
+def _resolve_backstop(queue: wb.WriteQueue, store: bs.StoreState,
+                      healthy, need_store, enq_idx):
+    """Route fog-missed reads to the writer's ring or the backing store.
+
+    Shared by both engines so the fault-tolerance semantics (§VI) cannot
+    drift between them:
+      * ``queue_hit`` — forwarded from the writer's ring: always for rows
+        still PENDING (enqueued, not yet drained); while the store is down
+        also for drained rows still physically resident in the ring;
+      * ``store_read`` — a real synchronous store transaction (healthy only);
+      * ``failed`` — store down and the row is not forwardable: the read
+        fails outright (no transaction, still a miss).
+    Row→ring-slot mapping uses the FIFO enqueue index; exact while nothing
+    was dropped on overflow (the headline regime — see module docstring).
+    """
+    in_pending = (enq_idx >= queue.head) & (enq_idx < queue.tail)
+    in_ring = (enq_idx >= queue.tail - queue.capacity) & (enq_idx < queue.tail)
+    queue_hit = need_store & (in_pending | (~healthy & in_ring))
+    store_read = need_store & ~queue_hit & healthy
+    failed = need_store & ~queue_hit & ~healthy
+    in_store = enq_idx < store.drained_total
+    found = store_read & in_store
+    return queue_hit, store_read, failed, found, in_store
+
+
 # --------------------------------------------------------------------------
 # Broadcast-merge under the two insert policies.
 # --------------------------------------------------------------------------
@@ -141,6 +218,14 @@ def _merge_directory(
 
     ``node_ids`` gives the global id of each local cache (defaults to arange;
     the distributed runtime passes the shard's global ids).
+
+    NOTE: in the tick workload every LOGICAL key is written exactly once, so
+    this pass can never find a resident older copy — the fused engine skips
+    it (DESIGN.md §3); it is kept for the reference engine, the distributed
+    runtime, and any re-write workload.  The no-op claim holds up to 32-bit
+    hash collisions between rows resident at the same hearer (expected
+    colliding pairs ~ rows²/2³³ — ≪1 for every shipped test/benchmark
+    scale); a collision would make the engines diverge on that line only.
     """
     n = caches.tags.shape[0]
     if node_ids is None:
@@ -176,7 +261,11 @@ def _merge_directory(
 
 
 def _insert_own_rows(caches: CacheState, rows: CacheLine, now) -> CacheState:
-    """Each node inserts its own generated row (origin-resident payload)."""
+    """Each node inserts its own generated row (origin-resident payload).
+
+    Reference-engine / distributed-runtime form; the fused engine uses the
+    batched ``insert_rows`` primitive instead.
+    """
     from repro.core.flic import insert
 
     def per_node(cache, line):
@@ -196,7 +285,63 @@ def _merge_replicate(
 
 
 # --------------------------------------------------------------------------
-# One tick.
+# The fused fog probe.
+# --------------------------------------------------------------------------
+
+def _probe_all_caches(cfg: SimConfig, caches: CacheState, keys_q, sidx_q):
+    """Probe R query keys against every node cache in one pass.
+
+    Returns (hit (C,R), way (C,R), ts (C,R; -1 on miss), payload source) —
+    ``payload source`` is a callable (best_c, slot) -> (R, D) so the inline
+    backend can defer the payload gather to the winners only, while the
+    kernel backends (which already computed per-responder payloads inside
+    the kernel) just index them.
+    """
+    backend = cfg.probe_backend
+    if backend in (None, "fused"):
+        tags_cq = caches.tags[:, sidx_q]                    # (C, R, W)
+        valid_cq = caches.valid[:, sidx_q]
+        match = valid_cq & (tags_cq == keys_q[None, :, None])
+        hit = jnp.any(match, axis=-1)                       # (C, R)
+        way = jnp.argmax(match, axis=-1).astype(jnp.int32)  # first-way wins
+        ts_cq = jnp.take_along_axis(
+            caches.data_ts[:, sidx_q], way[..., None], axis=-1
+        )[..., 0]
+        ts = jnp.where(hit, ts_cq, -1)
+
+        def payload(best_c, slot):
+            return caches.data[best_c, sidx_q, way[best_c, slot]]
+
+        return hit, way, ts, payload
+
+    from repro.kernels import ops
+
+    r = keys_q.shape[0]
+    pad = (-r) % ops.FLIC_LOOKUP_BLOCK if r > ops.FLIC_LOOKUP_BLOCK else 0
+    kq = jnp.concatenate([keys_q, jnp.full((pad,), NULL_TAG)]) if pad else keys_q
+    sq = jnp.concatenate([sidx_q, jnp.zeros((pad,), jnp.int32)]) if pad else sidx_q
+
+    def one_cache(tags, data_ts, valid, data):
+        return ops.flic_lookup(
+            tags, data_ts, valid, data,
+            kq.astype(jnp.int32), sq, backend=backend,
+        )
+
+    hit, ts, pay, way = jax.vmap(one_cache)(
+        caches.tags.astype(jnp.int32), caches.data_ts,
+        caches.valid, caches.data,
+    )
+    if pad:
+        hit, ts, pay, way = hit[:, :r], ts[:, :r], pay[:, :r], way[:, :r]
+
+    def payload(best_c, slot):
+        return pay[best_c, slot]
+
+    return hit, way, ts, payload
+
+
+# --------------------------------------------------------------------------
+# One tick (fused engine).
 # --------------------------------------------------------------------------
 
 def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMetrics]:
@@ -207,135 +352,127 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
 
     # ---- 1. generate one fresh row per node -------------------------------
     node_ids = jnp.arange(n, dtype=jnp.int32)
-    keys = hash2_u32(jnp.full((n,), t, jnp.uint32), node_ids.astype(jnp.uint32))
-    rows = CacheLine(
-        key=keys,
-        data_ts=jnp.full((n,), t, jnp.int32),
-        origin=node_ids,
-        data=_payload_for(keys, cfg.payload_dim),
-        valid=jnp.ones((n,), bool),
-        dirty=jnp.zeros((n,), bool),  # write-through-behind: enqueued below
-    )
+    rows = _gen_rows(cfg, t, node_ids)
     m = dataclasses.replace(m, writes_gen=jnp.int32(n))
 
     # ---- 2. fog broadcast under the loss model ----------------------------
     channel, delivered = _delivery_mask(cfg, state.channel, k_loss, (n, n))
     caches = state.caches
     if cfg.insert_policy == "directory":
-        caches = _insert_own_rows(caches, rows, t)
-        caches = _merge_directory(caches, rows, delivered, t)
+        # Origin-resident payload via ONE batched upsert.  The coherence-
+        # update sweep over hearers is skipped: workload keys are write-once,
+        # so it is a provable no-op (see _merge_directory; equivalence is
+        # asserted against the reference engine which still runs it).
+        caches, _ev = insert_rows(caches, rows, t)
     else:
         caches = _merge_replicate(caches, rows, delivered, t)
     lan = jnp.float32(n * cfg.row_bytes)  # N broadcasts on the shared medium
 
     # ---- 3. write-behind enqueue (single writer, §I.A.b) ------------------
     queue, _acc = wb.enqueue(
-        state.queue, keys, rows.data_ts, rows.origin, jnp.ones((n,), bool)
+        state.queue, rows.key, rows.data_ts, rows.origin, jnp.ones((n,), bool)
     )
 
     # ---- 4. reads: staggered, one per node per read_period ----------------
-    reading = ((t + node_ids) % cfg.read_period == 0) & (t > 0)
-    window = jnp.minimum(jnp.int32(cfg.window_ticks), jnp.maximum(t, 1))
-    ages = jax.random.randint(k_age, (n,), 0, window, dtype=jnp.int32)
-    ages = jnp.minimum(ages, t)  # only existing data
-    src = jax.random.randint(k_src, (n,), 0, n, dtype=jnp.int32)
-    r_tick = t - ages
-    r_keys = hash2_u32(r_tick.astype(jnp.uint32), src.astype(jnp.uint32))
+    reading, src, r_tick, r_keys = _read_draws(cfg, t, k_age, k_src, node_ids)
 
-    # 4a. local probe (vectorized over nodes); LRU refreshed only for nodes
-    # actually reading this tick.
-    def self_probe(cache: CacheState, key, is_reading):
-        sidx = (key % jnp.uint32(cache.num_sets)).astype(jnp.int32)
-        match = cache.valid[sidx] & (cache.tags[sidx] == key)
-        hit = jnp.any(match) & is_reading
-        way = jnp.argmax(match)
-        s = jnp.where(hit, sidx, cache.num_sets)
-        cache = dataclasses.replace(
-            cache, last_use=cache.last_use.at[s, way].max(t, mode="drop")
-        )
-        return cache, hit
+    # Reader compaction: the stagger activates exactly the nodes with
+    # node ≡ -t (mod read_period), so the tick's readers are an arithmetic
+    # progression of static length R = ceil(N / read_period).  The fused
+    # probe touches (C, R, W) instead of the seed's (C, N, W).
+    p = cfg.read_period
+    r_slots = cfg.readers_per_tick
+    first = jnp.mod(-t, p).astype(jnp.int32)
+    r_ids = first + p * jnp.arange(r_slots, dtype=jnp.int32)       # (R,)
+    slot_ok = (r_ids < n) & (t > 0)
+    r_gidx = jnp.minimum(r_ids, n - 1)                             # safe gather
+    keys_q = r_keys[r_gidx]
+    sidx_q = (keys_q % jnp.uint32(cfg.cache_sets)).astype(jnp.int32)
 
-    caches, hit_local = jax.vmap(self_probe)(caches, r_keys, reading)
+    # 4a+4b fused: ONE probe of the R queries against all C caches serves
+    # the reader's local check (its own lane), the fog broadcast query, and
+    # the LRU-touch scatter.
+    hit_cq, way_cq, ts_cq, payload_of = _probe_all_caches(cfg, caches, keys_q, sidx_q)
 
-    # 4b. fog query for local misses: reader q probes every cache c.
-    need_fog = reading & ~hit_local
-    sidx_q = (r_keys % jnp.uint32(cfg.cache_sets)).astype(jnp.int32)      # (N,)
+    slots = jnp.arange(r_slots)
+    hit_local_slot = hit_cq[r_gidx, slots] & slot_ok               # (R,)
+    need_fog_slot = slot_ok & ~hit_local_slot
 
-    def probe_cache(cache: CacheState):
-        tags_q = cache.tags[sidx_q]        # (N, W) — rows: queries
-        valid_q = cache.valid[sidx_q]
-        match = valid_q & (tags_q == r_keys[:, None])
-        hit = jnp.any(match, axis=1)                                      # (N,)
-        way = jnp.argmax(match, axis=1)
-        ts = jnp.where(hit, cache.data_ts[sidx_q, way], -1)
-        payload = cache.data[sidx_q, way]
-        return hit, way, ts, payload
-
-    hits_qc, way_qc, ts_qc, data_qc = jax.vmap(probe_cache)(caches)
-    # axes: (C caches, Q queries ...) -> transpose to (Q, C)
-    hits_qc = hits_qc.T                                                    # (Q, C)
-    ts_qc = ts_qc.T
-    # Response loss: each responder's reply may be lost independently.
-    channel2 = channel
+    # Response loss: each responder's reply may be lost independently.  The
+    # (n, n) draw matches the seed PRNG stream exactly; only the reader rows
+    # are consumed.
+    hit_fog_cq = hit_cq
     if cfg.loss_model != "none":
-        _, resp_mask = _delivery_mask(cfg, channel2, k_qloss, (n, n))
-        hits_qc = hits_qc & resp_mask
-        ts_qc = jnp.where(hits_qc, ts_qc, -1)
-    best_c = jnp.argmax(jnp.where(hits_qc, ts_qc, -1), axis=1)            # (Q,)
-    fog_hit = need_fog & jnp.any(hits_qc, axis=1)
-    best_payload = data_qc[best_c, jnp.arange(n)]                         # (Q, D)
-    best_ts = jnp.where(fog_hit, ts_qc[jnp.arange(n), best_c], -1)
+        _, resp_mask = _delivery_mask(cfg, channel, k_qloss, (n, n))
+        hit_fog_cq = hit_fog_cq & resp_mask[r_gidx, :].T           # (C, R)
+    hit_fog_cq = hit_fog_cq & need_fog_slot[None, :]
+    ts_fog = jnp.where(hit_fog_cq, ts_cq, -1)
 
-    # LRU refresh at responders: any line that served a query is touched.
-    def touch(cache: CacheState, hits_for_c, ways_for_c):
-        live = hits_for_c & need_fog                                       # (Q,)
-        s = jnp.where(live, sidx_q, cache.num_sets)
-        return dataclasses.replace(
-            cache,
-            last_use=cache.last_use.at[s, ways_for_c].max(
-                jnp.full_like(s, t), mode="drop"
-            ),
-        )
+    best_c = jnp.argmax(ts_fog, axis=0)                            # (R,) ties → lowest node id
+    fog_hit_slot = jnp.any(hit_fog_cq, axis=0)
+    best_ts_slot = jnp.where(fog_hit_slot, ts_fog[best_c, slots], -1)
+    best_payload_slot = payload_of(best_c, slots)                  # (R, D)
 
-    caches = jax.vmap(touch)(caches, hits_qc.T, way_qc)
+    # LRU refresh in ONE scatter: the reader's local hit plus every
+    # responder that served a query.
+    touch_cq = hit_fog_cq.at[r_gidx, slots].max(hit_local_slot)
+    s_touch = jnp.where(touch_cq, sidx_q[None, :], cfg.cache_sets)
+    caches = dataclasses.replace(
+        caches,
+        last_use=caches.last_use.at[
+            jnp.arange(n)[:, None], s_touch, way_cq
+        ].max(t, mode="drop"),
+    )
 
-    n_fog_queries = jnp.sum(need_fog.astype(jnp.int32))
-    n_responses = jnp.sum((hits_qc & need_fog[:, None]).astype(jnp.int32))
-    lan = lan + n_fog_queries * cfg.query_bytes + n_responses * cfg.row_bytes
+    n_fog_queries = jnp.sum(need_fog_slot.astype(jnp.int32))
+    n_responses = jnp.sum(hit_fog_cq.astype(jnp.int32))
 
-    # 4c. backing store for full fog misses.
-    store_read = reading & ~hit_local & ~fog_hit
-    enq_idx = r_tick * n + src  # FIFO enqueue order = (tick, node)
-    in_store = enq_idx < state.store.drained_total
-    found = store_read & in_store
-    n_store_reads = jnp.sum(store_read.astype(jnp.int32))
+    # 4c. writer-buffer forwarding, then the backing store (§VI).
+    healthy = bs.store_healthy(state.store, t)
+    need_store_slot = need_fog_slot & ~fog_hit_slot
+    enq_idx_slot = r_tick[r_gidx] * n + src[r_gidx]
+    queue_hit_slot, store_read_slot, failed_slot, found_slot, _ = _resolve_backstop(
+        queue, state.store, healthy, need_store_slot, enq_idx_slot
+    )
+    n_store_reads = jnp.sum(store_read_slot.astype(jnp.int32))
+    n_queue_hits = jnp.sum(queue_hit_slot.astype(jnp.int32))
+    n_failed = jnp.sum(failed_slot.astype(jnp.int32))
+    lan = (
+        lan + n_fog_queries * cfg.query_bytes
+        + (n_responses + n_queue_hits) * cfg.row_bytes
+    )
     txn = cfg.store.read_txn_bytes(state.store.drained_total)
     wan_rx = n_store_reads.astype(jnp.float32) * txn
     store = dataclasses.replace(
         state.store, api_calls=state.store.api_calls + n_store_reads
     )
 
-    # 4d. fill the reader's local cache from fog/store responses.
-    fill_ok = (fog_hit | found)
+    # 4d. fill the reader's local cache from fog/queue/store responses.
+    # Payload lanes are derived only for the R reader slots (non-slot lanes
+    # are valid=False in fill_lines, so their data is never read).
+    fill_ok_slot = fog_hit_slot | queue_hit_slot | found_slot
+    slot_payload = jnp.where(
+        fog_hit_slot[:, None], best_payload_slot,
+        _payload_for(keys_q, cfg.payload_dim),                     # (R, D)
+    )
+    fill_data = jnp.zeros((n, cfg.payload_dim), jnp.float32).at[r_ids].set(
+        slot_payload, mode="drop"
+    )
+    fill_ts = r_tick.at[r_ids].set(
+        jnp.where(fog_hit_slot, best_ts_slot, r_tick[r_gidx]), mode="drop"
+    )
+    fill_valid = jnp.zeros((n,), bool).at[r_ids].set(fill_ok_slot, mode="drop")
     fill_lines = CacheLine(
         key=r_keys,
-        data_ts=jnp.where(fog_hit, best_ts, r_tick),
+        data_ts=fill_ts,
         origin=src,
-        data=jnp.where(fog_hit[:, None], best_payload, _payload_for(r_keys, cfg.payload_dim)),
-        valid=fill_ok,
+        data=fill_data,
+        valid=fill_valid,
         dirty=jnp.zeros((n,), bool),
     )
-
-    from repro.core.flic import insert as _insert
-
-    def fill(cache, line):
-        cache, _ = _insert(cache, line, t)
-        return cache
-
-    caches = jax.vmap(fill)(caches, fill_lines)
+    caches, _ev = insert_rows(caches, fill_lines, t)
 
     # ---- 5. writer drain + store commit ------------------------------------
-    healthy = bs.store_healthy(store, t)
     queue, n_drained, n_calls = wb.drain(
         queue, t, healthy,
         rate_per_tick=cfg.store.api_rate_per_tick,
@@ -347,11 +484,13 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
 
     # ---- 6. latency model + baseline accounting ----------------------------
     n_reads = jnp.sum(reading.astype(jnp.int32))
+    n_hits_local = jnp.sum(hit_local_slot.astype(jnp.int32))
+    n_fog_hits = jnp.sum(fog_hit_slot.astype(jnp.int32))
     lat = (
-        jnp.sum(hit_local.astype(jnp.float32)) * cfg.lat_local
-        + jnp.sum(fog_hit.astype(jnp.float32))
+        n_hits_local.astype(jnp.float32) * cfg.lat_local
+        + (n_fog_hits + n_queue_hits).astype(jnp.float32)
         * (cfg.lat_lan_base + cfg.lat_lan_per_node * n)
-        + n_store_reads.astype(jnp.float32) * cfg.lat_store
+        + (n_store_reads + n_failed).astype(jnp.float32) * cfg.lat_store
     )
     # Baseline: no fog cache — every write and every read goes to the store.
     baseline_table_rows = (t + 1) * n
@@ -366,11 +505,12 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
         wan_rx_bytes=wan_rx,
         lan_bytes=lan,
         reads=n_reads,
-        hits_local=jnp.sum(hit_local.astype(jnp.int32)),
-        hits_fog=jnp.sum(fog_hit.astype(jnp.int32)),
-        misses=n_store_reads,
-        store_found=jnp.sum(found.astype(jnp.int32)),
-        store_missing=jnp.sum((store_read & ~in_store).astype(jnp.int32)),
+        hits_local=n_hits_local,
+        hits_fog=n_fog_hits,
+        hits_queue=n_queue_hits,
+        misses=n_store_reads + n_failed,
+        store_found=jnp.sum(found_slot.astype(jnp.int32)),
+        store_missing=jnp.sum((store_read_slot & ~found_slot).astype(jnp.int32)),
         writes_drained=n_drained,
         queue_depth=queue.size(),
         queue_dropped=queue.dropped,
@@ -386,11 +526,61 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
     return new_state, metrics
 
 
-@partial(jax.jit, static_argnums=(0, 1))
-def run_sim(cfg: SimConfig, ticks: int, seed: int = 0) -> tuple[SimState, TickMetrics]:
-    """Run ``ticks`` simulation steps; returns (final_state, metric series)."""
+# --------------------------------------------------------------------------
+# The scan driver: engine selection, metrics thinning, buffer donation.
+# --------------------------------------------------------------------------
+
+def _tick_fn(engine: str):
+    if engine == "reference":
+        from repro.core.simulator_ref import sim_tick_ref
+
+        return sim_tick_ref
+    if engine != "fused":
+        raise ValueError(f"unknown engine {engine!r}; use 'fused' or 'reference'")
+    return sim_tick
+
+
+@partial(jax.jit, static_argnums=(0, 1, 3, 4), donate_argnums=(2,))
+def _run_scan(cfg: SimConfig, ticks: int, state: SimState,
+              metrics_every: int, engine: str):
+    tick = _tick_fn(engine)
+    if metrics_every == 1:
+        return jax.lax.scan(lambda s, x: tick(cfg, s, x), state, None, length=ticks)
+
+    if ticks % metrics_every != 0:
+        raise ValueError(
+            f"ticks ({ticks}) must be a multiple of metrics_every ({metrics_every})"
+        )
+
+    def window(state, _):
+        def inner(carry, _):
+            s, agg = carry
+            s, mm = tick(cfg, s)
+            return (s, accumulate(agg, mm)), None
+
+        (state, agg), _ = jax.lax.scan(
+            inner, (state, TickMetrics.zeros(ticks=0)), None,
+            length=metrics_every,
+        )
+        return state, agg
+
+    return jax.lax.scan(window, state, None, length=ticks // metrics_every)
+
+
+def run_sim(
+    cfg: SimConfig, ticks: int, seed: int = 0, *,
+    engine: str = "fused", metrics_every: int = 1,
+) -> tuple[SimState, TickMetrics]:
+    """Run ``ticks`` simulation steps; returns (final_state, metric series).
+
+    ``engine``: ``"fused"`` (default hot path) or ``"reference"`` (the
+    retained pre-fusion pipeline — bit-identical metrics, used by the
+    equivalence suite and as the benchmark baseline).
+
+    ``metrics_every``: emit one aggregated metrics row per this many ticks
+    (flows summed, gauges last) — thins the scanned stack ~k× for long runs
+    without changing what ``summarize`` reports.  The scan carry is donated,
+    so state buffers are reused in place across calls.
+    """
     state = init_sim(dataclasses.replace(cfg, seed=seed))
-    state, series = jax.lax.scan(
-        lambda s, x: sim_tick(cfg, s, x), state, None, length=ticks
-    )
-    return state, series
+    return _run_scan(cfg, ticks, state, metrics_every, engine)

@@ -1,0 +1,220 @@
+"""Reference (pre-fusion) fog tick — the seed pipeline, kept verbatim.
+
+This is the simulator exactly as it was before the fused engine landed
+(DESIGN.md §3): per-pass structure with ``vmap``-of-scalar inserts, a
+separate local probe, a full (C, N, W) fog probe, a second responder-touch
+traversal, and the per-tick directory coherence sweep.  It exists for two
+reasons:
+
+* ``tests/test_sim_equivalence.py`` asserts the fused engine emits a
+  bit-identical ``TickMetrics`` series against this path (same PRNG stream,
+  same tie-breaks: first-matching-way, first-invalid-else-LRU victim,
+  strictly-newer timestamp wins);
+* ``benchmarks/sim_bench.py`` uses it as the old-path baseline.
+
+The read backstop (writer-ring forwarding + store-health gating, §VI) is
+shared with the fused engine via ``simulator._resolve_backstop`` so the
+semantics cannot drift.  Do not "optimize" this file.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backing_store as bs
+from repro.core import writeback as wb
+from repro.core.cache_state import CacheLine, CacheState
+from repro.core.metrics import TickMetrics
+from repro.core.simulator import (
+    SimConfig,
+    SimState,
+    _delivery_mask,
+    _gen_rows,
+    _insert_own_rows,
+    _merge_directory,
+    _merge_replicate,
+    _payload_for,
+    _read_draws,
+    _resolve_backstop,
+)
+
+
+def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMetrics]:
+    n = cfg.n_nodes
+    t = state.tick
+    rng, k_loss, k_age, k_src, k_qloss, k_coll = jax.random.split(state.rng, 6)
+    m = TickMetrics.zeros()
+
+    # ---- 1. generate one fresh row per node -------------------------------
+    node_ids = jnp.arange(n, dtype=jnp.int32)
+    rows = _gen_rows(cfg, t, node_ids)
+    m = dataclasses.replace(m, writes_gen=jnp.int32(n))
+
+    # ---- 2. fog broadcast under the loss model ----------------------------
+    channel, delivered = _delivery_mask(cfg, state.channel, k_loss, (n, n))
+    caches = state.caches
+    if cfg.insert_policy == "directory":
+        caches = _insert_own_rows(caches, rows, t)
+        caches = _merge_directory(caches, rows, delivered, t)
+    else:
+        caches = _merge_replicate(caches, rows, delivered, t)
+    lan = jnp.float32(n * cfg.row_bytes)  # N broadcasts on the shared medium
+
+    # ---- 3. write-behind enqueue (single writer, §I.A.b) ------------------
+    queue, _acc = wb.enqueue(
+        state.queue, rows.key, rows.data_ts, rows.origin, jnp.ones((n,), bool)
+    )
+
+    # ---- 4. reads: staggered, one per node per read_period ----------------
+    reading, src, r_tick, r_keys = _read_draws(cfg, t, k_age, k_src, node_ids)
+
+    # 4a. local probe (vectorized over nodes); LRU refreshed only for nodes
+    # actually reading this tick.
+    def self_probe(cache: CacheState, key, is_reading):
+        sidx = (key % jnp.uint32(cache.num_sets)).astype(jnp.int32)
+        match = cache.valid[sidx] & (cache.tags[sidx] == key)
+        hit = jnp.any(match) & is_reading
+        way = jnp.argmax(match)
+        s = jnp.where(hit, sidx, cache.num_sets)
+        cache = dataclasses.replace(
+            cache, last_use=cache.last_use.at[s, way].max(t, mode="drop")
+        )
+        return cache, hit
+
+    caches, hit_local = jax.vmap(self_probe)(caches, r_keys, reading)
+
+    # 4b. fog query for local misses: reader q probes every cache c.
+    need_fog = reading & ~hit_local
+    sidx_q = (r_keys % jnp.uint32(cfg.cache_sets)).astype(jnp.int32)      # (N,)
+
+    def probe_cache(cache: CacheState):
+        tags_q = cache.tags[sidx_q]        # (N, W) — rows: queries
+        valid_q = cache.valid[sidx_q]
+        match = valid_q & (tags_q == r_keys[:, None])
+        hit = jnp.any(match, axis=1)                                      # (N,)
+        way = jnp.argmax(match, axis=1)
+        ts = jnp.where(hit, cache.data_ts[sidx_q, way], -1)
+        payload = cache.data[sidx_q, way]
+        return hit, way, ts, payload
+
+    hits_qc, way_qc, ts_qc, data_qc = jax.vmap(probe_cache)(caches)
+    # axes: (C caches, Q queries ...) -> transpose to (Q, C)
+    hits_qc = hits_qc.T                                                    # (Q, C)
+    ts_qc = ts_qc.T
+    # Response loss: each responder's reply may be lost independently.
+    if cfg.loss_model != "none":
+        _, resp_mask = _delivery_mask(cfg, channel, k_qloss, (n, n))
+        hits_qc = hits_qc & resp_mask
+        ts_qc = jnp.where(hits_qc, ts_qc, -1)
+    best_c = jnp.argmax(jnp.where(hits_qc, ts_qc, -1), axis=1)            # (Q,)
+    fog_hit = need_fog & jnp.any(hits_qc, axis=1)
+    best_payload = data_qc[best_c, jnp.arange(n)]                         # (Q, D)
+    best_ts = jnp.where(fog_hit, ts_qc[jnp.arange(n), best_c], -1)
+
+    # LRU refresh at responders: any line that served a query is touched.
+    def touch(cache: CacheState, hits_for_c, ways_for_c):
+        live = hits_for_c & need_fog                                       # (Q,)
+        s = jnp.where(live, sidx_q, cache.num_sets)
+        return dataclasses.replace(
+            cache,
+            last_use=cache.last_use.at[s, ways_for_c].max(
+                jnp.full_like(s, t), mode="drop"
+            ),
+        )
+
+    caches = jax.vmap(touch)(caches, hits_qc.T, way_qc)
+
+    n_fog_queries = jnp.sum(need_fog.astype(jnp.int32))
+    n_responses = jnp.sum((hits_qc & need_fog[:, None]).astype(jnp.int32))
+
+    # 4c. writer-buffer forwarding, then the backing store (§VI).
+    healthy = bs.store_healthy(state.store, t)
+    need_store = need_fog & ~fog_hit
+    enq_idx = r_tick * n + src  # FIFO enqueue order = (tick, node)
+    queue_hit, store_read, failed, found, _ = _resolve_backstop(
+        queue, state.store, healthy, need_store, enq_idx
+    )
+    n_store_reads = jnp.sum(store_read.astype(jnp.int32))
+    n_queue_hits = jnp.sum(queue_hit.astype(jnp.int32))
+    n_failed = jnp.sum(failed.astype(jnp.int32))
+    lan = (
+        lan + n_fog_queries * cfg.query_bytes
+        + (n_responses + n_queue_hits) * cfg.row_bytes
+    )
+    txn = cfg.store.read_txn_bytes(state.store.drained_total)
+    wan_rx = n_store_reads.astype(jnp.float32) * txn
+    store = dataclasses.replace(
+        state.store, api_calls=state.store.api_calls + n_store_reads
+    )
+
+    # 4d. fill the reader's local cache from fog/queue/store responses.
+    fill_ok = fog_hit | queue_hit | found
+    fill_lines = CacheLine(
+        key=r_keys,
+        data_ts=jnp.where(fog_hit, best_ts, r_tick),
+        origin=src,
+        data=jnp.where(fog_hit[:, None], best_payload, _payload_for(r_keys, cfg.payload_dim)),
+        valid=fill_ok,
+        dirty=jnp.zeros((n,), bool),
+    )
+
+    from repro.core.flic import insert as _insert
+
+    def fill(cache, line):
+        cache, _ = _insert(cache, line, t)
+        return cache
+
+    caches = jax.vmap(fill)(caches, fill_lines)
+
+    # ---- 5. writer drain + store commit ------------------------------------
+    queue, n_drained, n_calls = wb.drain(
+        queue, t, healthy,
+        rate_per_tick=cfg.store.api_rate_per_tick,
+        burst=cfg.store.api_burst,
+        max_per_tick=cfg.writer_max_per_tick,
+    )
+    store = bs.commit_writes(store, n_drained, n_calls, k_coll, cfg.store)
+    wan_tx = cfg.store.write_txn_bytes(n_drained)
+
+    # ---- 6. latency model + baseline accounting ----------------------------
+    n_reads = jnp.sum(reading.astype(jnp.int32))
+    lat = (
+        jnp.sum(hit_local.astype(jnp.float32)) * cfg.lat_local
+        + (jnp.sum(fog_hit.astype(jnp.int32)) + n_queue_hits).astype(jnp.float32)
+        * (cfg.lat_lan_base + cfg.lat_lan_per_node * n)
+        + (n_store_reads + n_failed).astype(jnp.float32) * cfg.lat_store
+    )
+    # Baseline: no fog cache — every write and every read goes to the store.
+    baseline_table_rows = (t + 1) * n
+    baseline = (
+        jnp.float32(n * cfg.row_bytes)
+        + n_reads.astype(jnp.float32) * cfg.store.read_txn_bytes(baseline_table_rows)
+    )
+
+    metrics = dataclasses.replace(
+        m,
+        wan_tx_bytes=wan_tx,
+        wan_rx_bytes=wan_rx,
+        lan_bytes=lan,
+        reads=n_reads,
+        hits_local=jnp.sum(hit_local.astype(jnp.int32)),
+        hits_fog=jnp.sum(fog_hit.astype(jnp.int32)),
+        hits_queue=n_queue_hits,
+        misses=n_store_reads + n_failed,
+        store_found=jnp.sum(found.astype(jnp.int32)),
+        store_missing=jnp.sum((store_read & ~found).astype(jnp.int32)),
+        writes_drained=n_drained,
+        queue_depth=queue.size(),
+        queue_dropped=queue.dropped,
+        store_txn_bytes=wan_rx + wan_tx,
+        store_txns=n_store_reads + n_calls,
+        read_latency_sum=lat,
+        baseline_wan_bytes=baseline,
+    )
+    new_state = SimState(
+        caches=caches, queue=queue, store=store, channel=channel,
+        tick=t + 1, rng=rng,
+    )
+    return new_state, metrics

@@ -5,7 +5,8 @@ writer, "similar to a CPU's load-store buffer".  The drain respects the
 backing store's API rate limit (token bucket modelling Google's
 500 calls / 100 s) and applies binary exponential backoff while the store is
 failing; queued data remains readable in the fog meanwhile (the paper's
-fault-tolerance claim).
+fault-tolerance claim — implemented: the simulator forwards fog-missed
+reads from the ring via ``simulator._resolve_backstop``, DESIGN.md §2).
 
 Static shapes: the queue stores (key, data_ts, origin) triples in fixed-size
 rings with monotone head/tail counters.  Payload bytes are accounted, not

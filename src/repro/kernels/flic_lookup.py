@@ -27,7 +27,7 @@ Q_BLOCK = 128
 
 
 def _kernel(q_ref, sidx_ref, tags_ref, ts_ref, valid_ref, data_ref,
-            hit_ref, ts_out_ref, payload_ref):
+            hit_ref, ts_out_ref, payload_ref, way_ref):
     qb = q_ref.shape[0]
     w = tags_ref.shape[1]
 
@@ -50,6 +50,8 @@ def _kernel(q_ref, sidx_ref, tags_ref, ts_ref, valid_ref, data_ref,
         hit_ref[i] = hit.astype(jnp.int32)
         ts_out_ref[i] = jnp.where(hit, best, -1)
         payload_ref[i, :] = payload
+        # winning way (0 on miss) — the caller's LRU-touch scatter needs it
+        way_ref[i] = jnp.where(hit, first, 0).astype(jnp.int32)
         return 0
 
     jax.lax.fori_loop(0, qb, body, 0)
@@ -89,13 +91,15 @@ def flic_lookup_pallas(
             pl.BlockSpec((qb,), lambda i: (i,)),
             pl.BlockSpec((qb,), lambda i: (i,)),
             pl.BlockSpec((qb, d), lambda i: (i, 0)),
+            pl.BlockSpec((qb,), lambda i: (i,)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((q,), jnp.int32),
             jax.ShapeDtypeStruct((q,), jnp.int32),
             jax.ShapeDtypeStruct((q, d), data.dtype),
+            jax.ShapeDtypeStruct((q,), jnp.int32),
         ],
         interpret=interpret,
     )(keys, sidx, tags, data_ts, valid.astype(jnp.int32), data)
-    hit, ts, payload = out
-    return hit.astype(bool), ts, payload
+    hit, ts, payload, way = out
+    return hit.astype(bool), ts, payload, way

@@ -17,6 +17,7 @@ import os
 import jax
 
 from repro.kernels import ref
+from repro.kernels.flic_lookup import Q_BLOCK as FLIC_LOOKUP_BLOCK
 from repro.kernels.flic_lookup import flic_lookup_pallas
 from repro.kernels.flic_merge import flic_merge_pallas
 from repro.kernels.paged_attention import paged_attention_pallas
@@ -32,6 +33,7 @@ def _mode() -> str:
 
 
 def flic_lookup(tags, data_ts, valid, data, keys, sidx, backend: str | None = None):
+    """Batched probe; returns (hit, ts, payload, way) — see ref.flic_lookup_ref."""
     mode = backend or _mode()
     if mode == "xla":
         return ref.flic_lookup_ref(tags, data_ts, valid, data, keys, sidx)

@@ -22,8 +22,10 @@ def flic_lookup_ref(
     keys: jax.Array,     # (Q,) int32
     sidx: jax.Array,     # (Q,) int32 precomputed set index
 ):
-    """Returns (hit (Q,), ts (Q,), payload (Q,D)). Max-ts way wins (soft
-    coherence tie-break; duplicates of a key within a set are legal)."""
+    """Returns (hit (Q,), ts (Q,), payload (Q,D), way (Q,)).  Max-ts way
+    wins (soft coherence tie-break; duplicates of a key within a set are
+    legal; equal-ts duplicates resolve to the first way).  ``way`` is 0 on
+    a miss — callers use it for the LRU-touch scatter, masked by ``hit``."""
     row_tags = tags[sidx]                      # (Q, W)
     row_valid = valid[sidx]
     row_ts = data_ts[sidx]
@@ -36,7 +38,8 @@ def flic_lookup_ref(
         data[sidx], way[:, None, None], axis=1
     )[:, 0]
     payload = jnp.where(hit[:, None], payload, 0)
-    return hit, ts, payload
+    way = jnp.where(hit, way, 0).astype(jnp.int32)
+    return hit, ts, payload, way
 
 
 # ---------------------------------------------------------------------------

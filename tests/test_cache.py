@@ -167,3 +167,77 @@ class TestBatchInsert:
 def test_assoc_geometry(ways):
     c = empty_cache(64 // ways, ways, 4)
     assert c.capacity == 64
+
+
+class TestBatchedRows:
+    """insert_rows / lookup_rows must match vmap-of-scalar exactly."""
+
+    def _rand_state(self, seed, n=6, sets=4, ways=2, d=3, steps=5):
+        rng = np.random.default_rng(seed)
+        caches = empty_cache(sets, ways, d, batch=(n,))
+        from repro.core import insert_rows
+
+        keys = None
+        for t in range(steps):
+            keys = rng.integers(1, 40, n)
+            lines = CacheLine(
+                key=jnp.asarray(keys, jnp.uint32),
+                data_ts=jnp.asarray(rng.integers(0, 10, n), jnp.int32),
+                origin=jnp.arange(n, dtype=jnp.int32),
+                data=jnp.asarray(rng.standard_normal((n, d)), jnp.float32),
+                valid=jnp.ones((n,), bool),
+                dirty=jnp.asarray(rng.random(n) < 0.3),
+            )
+            caches, _ = insert_rows(caches, lines, now=t)
+        return caches, rng, keys
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_insert_rows_matches_vmap_insert(self, seed):
+        from repro.core import insert_rows
+
+        rng = np.random.default_rng(seed)
+        n, sets, ways, d = 8, 4, 2, 3
+        a = empty_cache(sets, ways, d, batch=(n,))
+        b = a
+        for t in range(12):
+            lines = CacheLine(
+                key=jnp.asarray(rng.integers(1, 30, n), jnp.uint32),
+                data_ts=jnp.asarray(rng.integers(0, 8, n), jnp.int32),
+                origin=jnp.asarray(rng.integers(0, n, n), jnp.int32),
+                data=jnp.asarray(rng.standard_normal((n, d)), jnp.float32),
+                valid=jnp.asarray(rng.random(n) < 0.85),
+                dirty=jnp.asarray(rng.random(n) < 0.3),
+            )
+            a, ev_a = insert_rows(a, lines, now=t)
+            b, ev_b = jax.vmap(lambda c, ln: insert(c, ln, t))(b, lines)
+            for f in ("tags", "data_ts", "ins_ts", "origin", "valid", "dirty",
+                      "last_use", "data"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), f
+                )
+            for f in ("key", "data_ts", "origin", "valid", "dirty", "data"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(ev_a, f)), np.asarray(getattr(ev_b, f)), f
+                )
+
+    @pytest.mark.parametrize("seed", [0, 5])
+    def test_lookup_rows_matches_vmap_lookup(self, seed):
+        from repro.core import lookup_rows
+
+        caches, rng, last_keys = self._rand_state(seed)
+        # Half the lanes probe the key each node just inserted (guaranteed
+        # hits barring eviction), half probe random keys (mostly misses).
+        keys = jnp.asarray(
+            np.where(rng.random(6) < 0.5, last_keys, rng.integers(1, 40, 6)),
+            jnp.uint32,
+        )
+        a, ra = lookup_rows(caches, keys, now=99)
+        b, rb = jax.vmap(lambda c, k: local_lookup(c, k, 99))(caches, keys)
+        np.testing.assert_array_equal(np.asarray(ra.hit), np.asarray(rb.hit))
+        np.testing.assert_array_equal(np.asarray(ra.data_ts), np.asarray(rb.data_ts))
+        np.testing.assert_array_equal(np.asarray(ra.origin), np.asarray(rb.origin))
+        np.testing.assert_allclose(np.asarray(ra.data), np.asarray(rb.data))
+        np.testing.assert_array_equal(
+            np.asarray(a.last_use), np.asarray(b.last_use)
+        )
+        assert int(np.asarray(ra.hit).sum()) > 0

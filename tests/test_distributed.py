@@ -26,14 +26,16 @@ def _run(code: str, timeout=540) -> str:
     return out.stdout
 
 
+@pytest.mark.slow
 def test_distributed_fog_matches_headline():
     """The shard_map fog on 8 devices reproduces the paper's regime."""
     out = _run("""
         import jax, json
         from repro.core import SimConfig, summarize
         from repro.core.distributed import run_distributed_sim
-        mesh = jax.make_mesh((8,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        AxisType = getattr(jax.sharding, 'AxisType', None)
+        kw = dict(axis_types=(AxisType.Auto,)) if AxisType else {}
+        mesh = jax.make_mesh((8,), ('data',), **kw)
         cfg = SimConfig(n_nodes=48, cache_lines=200, loss_prob=0.01)
         _, series = run_distributed_sim(mesh, cfg, 500, axis='data')
         s = summarize(series)
@@ -46,16 +48,17 @@ def test_distributed_fog_matches_headline():
     assert s["queue_dropped"] == 0
 
 
+@pytest.mark.slow
 def test_mini_dryrun_lowers_and_compiles():
     """build_cell lowers+compiles on a (2,4) mesh for a full-size config."""
     out = _run("""
         import jax, json
-        from jax.sharding import AxisType
         from repro.config import get_arch, SHAPES
         from repro.launch.specs import build_cell
         from repro.shard.partition import use_rules, PLANS
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(AxisType.Auto, AxisType.Auto))
+        AxisType = getattr(jax.sharding, 'AxisType', None)
+        kw = dict(axis_types=(AxisType.Auto, AxisType.Auto)) if AxisType else {}
+        mesh = jax.make_mesh((2, 4), ('data', 'model'), **kw)
         cfg = get_arch('granite_8b')
         cell = build_cell(cfg, SHAPES['decode_32k'], mesh)
         with mesh, use_rules(mesh, 'decode'):
@@ -64,12 +67,15 @@ def test_mini_dryrun_lowers_and_compiles():
                              donate_argnums=cell.donate_argnums)
             compiled = jitted.lower(*cell.args).compile()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older JAX: one dict per device
+            cost = cost[0]
         print(json.dumps({'flops': float(cost.get('flops', -1))}))
     """)
     rec = json.loads(out.strip().splitlines()[-1])
     assert rec["flops"] != 0
 
 
+@pytest.mark.slow
 def test_loss_tolerance_degrades_gracefully():
     """Soft coherence's core promise: channel loss degrades reads in
     proportion to the loss rate — never a cliff (paper §II-B)."""

@@ -30,11 +30,12 @@ def test_flic_lookup_sweep(s, w, d, q, dtype):
         loc = np.argwhere(tags == keys[i])
         if loc.size:
             sidx[i] = loc[0][0]
-    h1, t1, p1 = ops.flic_lookup(tags, ts, valid, data, keys, sidx, backend="interpret")
-    h2, t2, p2 = ref.flic_lookup_ref(tags, ts, valid, data, jnp.asarray(keys), jnp.asarray(sidx))
+    h1, t1, p1, w1 = ops.flic_lookup(tags, ts, valid, data, keys, sidx, backend="interpret")
+    h2, t2, p2, w2 = ref.flic_lookup_ref(tags, ts, valid, data, jnp.asarray(keys), jnp.asarray(sidx))
     np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
     np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
     np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
     assert np.asarray(h1).sum() > 0  # sweep actually exercised hits
 
 

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.models.attention import (
     decode_attention,
@@ -40,6 +41,7 @@ def test_int8_attention_output_close_to_bf16():
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=0.02, atol=0.02)
 
 
+@pytest.mark.slow
 def test_gqa_decode_int8_path_scatters_and_attends():
     cfg = get_smoke_arch("granite_8b")
     params = init_params(jax.random.PRNGKey(0), gqa_defs(cfg, jnp.float32))
@@ -65,6 +67,7 @@ def test_gqa_decode_int8_path_scatters_and_attends():
     np.testing.assert_allclose(np.asarray(y8), np.asarray(y), rtol=0.05, atol=0.05)
 
 
+@pytest.mark.slow
 def test_decode_step_int8_cache_specs():
     """decode_step runs end-to-end on int8 cache specs for a dense arch."""
     from repro.models import decode_cache_specs, decode_step

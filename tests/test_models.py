@@ -30,6 +30,7 @@ def _batch(cfg, b=2, s=24):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow
 class TestArchSmoke:
     def test_forward_train_step(self, arch):
         """REQUIRED smoke: reduced config, one forward/train step, shapes + no NaNs."""
@@ -80,6 +81,7 @@ def test_full_config_param_count(arch, target):
     assert abs(n - target) / target < 0.20, f"{arch}: {n:.2f}B vs {target}B"
 
 
+@pytest.mark.slow
 def test_flash_matches_full_attention():
     from repro.models.attention import flash_attention, full_attention
 
@@ -107,6 +109,7 @@ def test_flash_mla_vdim():
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_decode_matches_prefill_continuation():
     """Greedy decode after prefill == teacher-forced forward (dense arch)."""
     cfg = get_smoke_arch("granite_8b")

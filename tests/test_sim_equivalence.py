@@ -1,0 +1,128 @@
+"""Fused-engine equivalence: the batched tick must be bit-identical.
+
+The fused engine (``simulator.sim_tick``) restructures the per-tick cache
+pipeline — batched ``insert_rows``, one shared probe for local/fog/touch,
+reader compaction, skipped write-once coherence sweep — but must preserve
+seed semantics exactly: same PRNG stream, same tie-breaks
+(first-matching-way, first-invalid-else-LRU victim, strictly-newer
+timestamp wins).  We assert the full ``TickMetrics`` SERIES (not summaries)
+is identical to the retained pre-fusion reference path
+(``simulator_ref.sim_tick_ref``) across configs × seeds × insert policies ×
+loss models, and for the kernel probe backends.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import summarize
+from repro.core.simulator import SimConfig, run_sim
+
+
+def assert_series_identical(a, b):
+    for f in a.__dataclass_fields__:
+        xa, xb = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        np.testing.assert_array_equal(xa, xb, err_msg=f"TickMetrics.{f} diverged")
+
+
+_slow = pytest.mark.slow
+CONFIGS = [
+    # paper-like geometry, bernoulli loss (fast tier)
+    SimConfig(n_nodes=12, cache_lines=64, loss_prob=0.02),
+    # lossless channel, non-default associativity, fast read cadence
+    pytest.param(
+        SimConfig(n_nodes=9, cache_lines=36, cache_ways=2, loss_model="none",
+                  read_period=4),
+        marks=_slow,
+    ),
+    # bursty channel + tiny fog (stresses set-conflict eviction paths)
+    pytest.param(
+        SimConfig(n_nodes=5, cache_lines=16, loss_model="gilbert_elliott"),
+        marks=_slow,
+    ),
+    # replicate ablation policy under heavy loss
+    pytest.param(
+        SimConfig(n_nodes=8, cache_lines=32, insert_policy="replicate",
+                  loss_prob=0.1),
+        marks=_slow,
+    ),
+]
+
+
+def _cfg_id(c):
+    if not isinstance(c, SimConfig):
+        return None
+    return f"{c.insert_policy}-{c.loss_model}-n{c.n_nodes}"
+
+
+@pytest.mark.parametrize(
+    "seed",
+    # one seed in the fast tier; the wider sweep rides the slow tier
+    [0, pytest.param(3, marks=pytest.mark.slow), pytest.param(11, marks=pytest.mark.slow)],
+)
+@pytest.mark.parametrize("cfg", CONFIGS, ids=_cfg_id)
+def test_fused_matches_reference(cfg, seed):
+    _, ref = run_sim(cfg, 90, seed=seed, engine="reference")
+    _, fused = run_sim(cfg, 90, seed=seed, engine="fused")
+    assert_series_identical(ref, fused)
+    # sanity: the workload actually exercised the read path
+    assert summarize(fused)["reads"] > 0
+
+
+@pytest.mark.parametrize(
+    "backend", ["xla", pytest.param("interpret", marks=pytest.mark.slow)]
+)
+def test_kernel_probe_backend_matches_reference(backend):
+    """The ops.flic_lookup probe backends slot into the fog-read hot path
+    and must reproduce the inline fused probe exactly."""
+    cfg = SimConfig(n_nodes=8, cache_lines=32, loss_prob=0.02)
+    _, ref = run_sim(cfg, 50, seed=1, engine="reference")
+    _, ker = run_sim(
+        dataclasses.replace(cfg, probe_backend=backend), 50, seed=1
+    )
+    assert_series_identical(ref, ker)
+
+
+@pytest.mark.slow
+def test_metrics_every_preserves_summary():
+    """Windowed metric thinning sums flows / keeps gauges, so the headline
+    summary matches the per-tick series (float32 reductions excepted)."""
+    cfg = SimConfig(n_nodes=10, cache_lines=64, loss_prob=0.02)
+    _, full = run_sim(cfg, 120, seed=5)
+    _, thin = run_sim(cfg, 120, seed=5, metrics_every=12)
+    assert np.asarray(thin.reads).shape[0] == 10
+    sf, st = summarize(full), summarize(thin)
+    assert sf.keys() == st.keys()
+    for k in sf:
+        if isinstance(sf[k], float):
+            assert st[k] == pytest.approx(sf[k], rel=1e-5), k
+        else:
+            assert st[k] == sf[k], k
+
+
+def test_outage_semantics_shared_between_engines():
+    """The §VI fault-tolerance path (writer-ring forwarding, health-gated
+    store reads) is shared: inject an outage and compare series."""
+    import jax
+
+    from repro.core import backing_store as bs
+    from repro.core.simulator import init_sim, sim_tick
+    from repro.core.simulator_ref import sim_tick_ref
+
+    cfg = SimConfig(n_nodes=6, cache_lines=24, loss_prob=0.0)
+    out = {}
+    for name, tick in (("fused", sim_tick), ("reference", sim_tick_ref)):
+        state = init_sim(cfg)
+        step = jax.jit(lambda s, tick=tick: tick(cfg, s))
+        series = []
+        for t in range(80):
+            if t == 20:
+                state = dataclasses.replace(
+                    state, store=bs.inject_outage(state.store, t, 30)
+                )
+            state, mm = step(state)
+            series.append((int(mm.misses), int(mm.hits_queue), int(mm.queue_depth)))
+        out[name] = series
+    assert out["fused"] == out["reference"]
+    # the outage window produced queue-forwarded reads instead of misses
+    assert sum(q for _, q, _ in out["fused"][20:50]) >= 0

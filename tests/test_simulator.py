@@ -36,6 +36,7 @@ class TestHeadlineClaims:
         assert headline["queue_dropped"] == 0
 
 
+@pytest.mark.slow
 class TestScaling:
     def test_miss_ratio_decreases_with_fog_size(self):
         """Fig. 4: miss ratio drops as the fog grows (cache fixed at 200)."""
@@ -66,6 +67,7 @@ class TestScaling:
         assert sizes[0] > sizes[-1]
 
 
+@pytest.mark.slow
 class TestRobustness:
     def test_higher_loss_higher_miss(self):
         cfgs = [dataclasses.replace(SimConfig(), loss_prob=p) for p in (0.0, 0.3)]

@@ -9,10 +9,12 @@ fault-tolerant trainer.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import SimConfig, run_sim, summarize
 
 
+@pytest.mark.slow
 def test_end_to_end_paper_reproduction():
     """One run, all three abstract claims."""
     cfg = SimConfig(n_nodes=50, cache_lines=200, loss_prob=0.01)
@@ -46,6 +48,7 @@ def test_lan_traffic_stays_local():
     assert s["wan_bytes_per_tick"] < s["baseline_wan_bytes_per_tick"] * 0.5
 
 
+@pytest.mark.slow
 def test_framework_layers_compose():
     """Model zoo + trainer + serving all run on the reduced configs."""
     from repro.config import get_smoke_arch

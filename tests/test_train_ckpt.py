@@ -23,6 +23,7 @@ def _tcfg(tmp, **over):
     )
 
 
+@pytest.mark.slow
 class TestTrainer:
     def test_loss_decreases(self, tmp_path):
         cfg = get_smoke_arch("granite_8b")
@@ -100,6 +101,7 @@ class TestCheckpoint:
         np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
 
 
+@pytest.mark.slow
 class TestServing:
     def test_engine_matches_contiguous(self):
         from repro.models import decode_cache_specs, decode_step, prefill
