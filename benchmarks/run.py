@@ -34,6 +34,12 @@ def main() -> None:
         node_counts=(50, 200) if quick else (50, 200, 500),
     )
 
+    from benchmarks.scenario_bench import bench_scenarios
+    bench_scenarios(
+        ticks=int(600 * scale),
+        scenarios=("paper", "zipf", "churn") if quick else None,
+    )
+
     from benchmarks.roofline import emit_table
     rows = emit_table()
     if not rows:

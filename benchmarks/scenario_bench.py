@@ -1,0 +1,92 @@
+"""Per-scenario fog benchmark: the workload layer swept end to end.
+
+For every named ``workload.SCENARIOS`` preset this measures, on the fused
+engine at the paper's geometry:
+
+* ``read_miss_ratio`` — the paper's "<2%" claim, per scenario;
+* ``sync_store_request_ratio`` — the "<5% of requests" claim;
+* ``wan_reduction_vs_baseline`` — the ">50% byte reduction" claim;
+* ``stale_read_ratio`` / ``coherence_updates`` / ``writes_coalesced`` —
+  the soft-coherence observables that only exist off the write-once stream;
+* ``fused_ticks_per_s`` — engine throughput (the scenario machinery must not
+  tank the hot path; the "paper" row is the PR-1 regression gate).
+
+Emits ``BENCH_scenarios.json`` plus harness CSV lines.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.scenario_bench [--quick]``
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.core.metrics import summarize
+from repro.core.simulator import SimConfig, run_sim
+from repro.core.workload import SCENARIOS
+
+TICKS = 600
+N_NODES = 50
+
+
+def _cfg_for(name: str, n_nodes: int) -> SimConfig:
+    return SimConfig(
+        n_nodes=n_nodes, cache_lines=200, loss_prob=0.01,
+        workload=SCENARIOS[name],
+    )
+
+
+def bench_scenarios(ticks: int = TICKS, n_nodes: int = N_NODES,
+                    scenarios=None, out_path: str = "BENCH_scenarios.json") -> dict:
+    results = {"ticks": ticks, "n_nodes": n_nodes, "scenarios": []}
+    for name in (scenarios or SCENARIOS):
+        cfg = _cfg_for(name, n_nodes)
+        # warmup run covers compile; timed run measures the hot path
+        _, series = run_sim(cfg, ticks, seed=0)
+        jax.block_until_ready(series.reads)
+        t0 = time.perf_counter()
+        _, series = run_sim(cfg, ticks, seed=1)
+        jax.block_until_ready(series.reads)
+        secs = time.perf_counter() - t0
+        s = summarize(series)
+        row = {
+            "scenario": name,
+            "fused_ticks_per_s": ticks / secs,
+            "read_miss_ratio": s["read_miss_ratio"],
+            "sync_store_request_ratio": s["sync_store_request_ratio"],
+            "wan_reduction_vs_baseline": s["wan_reduction_vs_baseline"],
+            "stale_read_ratio": s["stale_read_ratio"],
+            "coherence_updates": s["coherence_updates"],
+            "writes_coalesced": s["writes_coalesced"],
+            "churn_rejoins": s["churn_rejoins"],
+        }
+        results["scenarios"].append(row)
+        emit(
+            f"scenario.{name}", 1e6 * secs / ticks,
+            f"miss={s['read_miss_ratio']:.4f} sync={s['sync_store_request_ratio']:.4f} "
+            f"wan_red={s['wan_reduction_vs_baseline']:.3f} stale={s['stale_read_ratio']:.4f} "
+            f"ticks_per_s={ticks / secs:.1f}",
+        )
+
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    res = bench_scenarios(
+        ticks=150 if quick else TICKS,
+        scenarios=("paper", "zipf", "churn") if quick else None,
+    )
+    paper = next(r for r in res["scenarios"] if r["scenario"] == "paper")
+    # the workload layer must not regress the default hot path
+    assert paper["read_miss_ratio"] < 0.05, paper
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

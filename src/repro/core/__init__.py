@@ -12,6 +12,8 @@ code and a slow cloud backing store:
   reads, rate caps, failure windows / a well-behaved "db" profile);
 * ``simulator`` — the paper's Docker fog testbed as one vectorized
   ``lax.scan`` program;
+* ``workload`` — scenario layer (``WorkloadSpec``/``SCENARIOS``): key
+  popularity, read recency, rate modulation, node churn (DESIGN.md §7);
 * ``distributed`` — the pod-scale embodiment under ``shard_map``.
 """
 from repro.core.cache_state import CacheLine, CacheState, empty_cache, null_line
@@ -30,10 +32,16 @@ from repro.core.coherence import (
     markov_loss_bound,
     merge_broadcasts,
 )
+from repro.core.flic import invalidate_nodes, update_rows
 from repro.core.metrics import TickMetrics, summarize
 from repro.core.simulator import SimConfig, SimState, init_sim, run_sim, sim_tick
+from repro.core.workload import SCENARIOS, WorkloadSpec
 
 __all__ = [
+    "SCENARIOS",
+    "WorkloadSpec",
+    "update_rows",
+    "invalidate_nodes",
     "CacheLine",
     "CacheState",
     "empty_cache",

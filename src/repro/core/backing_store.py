@@ -15,8 +15,16 @@ Two semantic profiles:
 
 Store *contents* are represented analytically: the single FIFO writer drains
 rows in enqueue order, so the store holds exactly the first ``drained_total``
-enqueued rows.  Membership of a (tick, node) datum is then an integer
-comparison against its enqueue index — exact, with static shapes.
+enqueued rows.  For the write-once stream workload, membership of a (tick,
+node) datum is then an integer comparison against its enqueue index — exact,
+with static shapes.
+
+Mutable-key workloads carry a KEYED VERSIONED membership model instead:
+``init_store(key_universe=K)`` adds ``table_ts[k]`` — the newest data
+timestamp of key ``k`` durably committed (-1 = absent).  ``commit_keyed_rows``
+folds each drained batch into the table with a scatter-max, so durability and
+staleness of any version are single gathers.  ``drained_total`` still counts
+committed rows (it sizes the sheets full-table read).
 
 Failures: a deterministic outage schedule (for tests) plus an optional
 PRNG-driven outage chain (for robustness runs).  While an outage is active
@@ -41,15 +49,19 @@ class StoreState:
     read_bytes: jax.Array      # int64-ish float32 accumulators kept in sim metrics
     outage_until: jax.Array    # int32 — store is down while now < outage_until
     lost_writes: jax.Array     # int32 — rows clobbered by write collisions
+    table_ts: jax.Array        # (K,) int32 — keyed mode: newest durable data_ts
+    #                            per key id (-1 = absent); (0,) for stream mode
 
 
-def init_store() -> StoreState:
+def init_store(key_universe: int = 0) -> StoreState:
+    """``key_universe > 0`` enables the keyed versioned-membership table."""
     return StoreState(
         drained_total=jnp.int32(0),
         api_calls=jnp.int32(0),
         read_bytes=jnp.float32(0.0),
         outage_until=jnp.int32(0),
         lost_writes=jnp.int32(0),
+        table_ts=jnp.full((key_universe,), -1, jnp.int32),
     )
 
 
@@ -107,6 +119,26 @@ def commit_writes(
         drained_total=store.drained_total + n_rows - lost,
         api_calls=store.api_calls + jnp.asarray(n_calls, jnp.int32),
         lost_writes=store.lost_writes + lost,
+    )
+
+
+def commit_keyed_rows(
+    store: StoreState, key_ids: jax.Array, data_ts: jax.Array, mask: jax.Array
+) -> StoreState:
+    """Fold a drained batch of keyed versions into the membership table.
+
+    Scatter-max keeps the newest durable version per key; the FIFO drain
+    already orders a key's versions by timestamp (coalescing guarantees at
+    most one pending slot per key), so max == last-committed.  Row/call
+    accounting stays with ``commit_writes``.
+    """
+    ku = store.table_ts.shape[0]
+    tgt = jnp.where(jnp.asarray(mask, bool), jnp.asarray(key_ids, jnp.int32), ku)
+    return dataclasses.replace(
+        store,
+        table_ts=store.table_ts.at[tgt].max(
+            jnp.asarray(data_ts, jnp.int32), mode="drop"
+        ),
     )
 
 

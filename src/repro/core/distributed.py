@@ -28,11 +28,13 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import backing_store as bs
+from repro.core import workload as wl
 from repro.core import writeback as wb
 from repro.core.cache_state import CacheLine, CacheState, empty_cache
 from repro.core.coherence import bernoulli_loss_mask
+from repro.core.flic import invalidate_nodes, update_rows
 from repro.core.metrics import TickMetrics
-from repro.core.simulator import SimConfig, _insert_own_rows, _merge_directory, _payload_for
+from repro.core.simulator import SimConfig, _insert_own_rows, _payload_for
 from repro.utils.hashing import hash2_u32
 
 
@@ -46,18 +48,22 @@ class FogShardState:
     store: bs.StoreState     # replicated
     tick: jax.Array          # replicated int32
     rng: jax.Array           # replicated key (devices derive per-shard keys)
+    latest_ts: jax.Array     # replicated (K,) int32 — newest write per key id
+    #                          (mutable workloads; staleness ground truth)
 
 
 def init_fog_shard(cfg: SimConfig, n_local: int, seed: int = 0) -> FogShardState:
+    ku = cfg.workload.key_universe if cfg.workload.mutable else 0
     return FogShardState(
         caches=empty_cache(
             cfg.cache_sets, cfg.cache_ways, cfg.payload_dim, jnp.float32,
             batch=(n_local,),
         ),
-        queue=wb.empty_queue(cfg.queue_capacity),
-        store=bs.init_store(),
+        queue=wb.empty_queue(cfg.queue_capacity, key_universe=ku),
+        store=bs.init_store(key_universe=ku),
         tick=jnp.int32(0),
         rng=jax.random.PRNGKey(seed),
+        latest_ts=jnp.full((ku,), -1, jnp.int32),
     )
 
 
@@ -83,6 +89,7 @@ def fog_shard_tick(
     ndev = cfg.n_nodes // n_local
     rank = jax.lax.axis_index(axis)
     n_total = ndev * n_local
+    spec = cfg.workload
     t = state.tick
     node_ids = rank * n_local + jnp.arange(n_local, dtype=jnp.int32)
 
@@ -90,15 +97,37 @@ def fog_shard_tick(
     k_age = _shard_rng(state.rng, t, rank, 2)
     k_src = _shard_rng(state.rng, t, rank, 3)
     k_qloss = _shard_rng(state.rng, t, rank, 4)
+    k_wr = _shard_rng(state.rng, t, rank, 5)
+
+    # ---- 0. churn: rejoining shard nodes cold-start ------------------------
+    caches = state.caches
+    if spec.has_churn:
+        online_l = wl.online_mask(spec, n_total, t, node_ids)
+        rejoin_l = wl.rejoin_mask(spec, n_total, t, node_ids)
+        caches = invalidate_nodes(caches, rejoin_l)
+        n_rejoin = jax.lax.psum(jnp.sum(rejoin_l.astype(jnp.int32)), axis)
+    else:
+        online_l = jnp.ones((n_local,), bool)
+        n_rejoin = jnp.int32(0)
 
     # ---- 1. generate + broadcast (all_gather) ------------------------------
-    keys_local = hash2_u32(jnp.full((n_local,), t, jnp.uint32), node_ids.astype(jnp.uint32))
+    ts_l = jnp.full((n_local,), t, jnp.int32)
+    if spec.mutable:
+        kids_local = wl.sample_key_ids(spec, k_wr, (n_local,))
+        keys_local = wl.key_hash(kids_local)
+        write_mask_l = wl.rate_mask(spec, n_total, t, node_ids) & online_l
+        payload_l = wl.versioned_payload(keys_local, ts_l, cfg.payload_dim)
+    else:
+        kids_local = jnp.zeros((n_local,), jnp.int32)
+        keys_local = hash2_u32(jnp.full((n_local,), t, jnp.uint32), node_ids.astype(jnp.uint32))
+        write_mask_l = jnp.ones((n_local,), bool)
+        payload_l = _payload_for(keys_local, cfg.payload_dim)
     rows_local = CacheLine(
         key=keys_local,
-        data_ts=jnp.full((n_local,), t, jnp.int32),
+        data_ts=ts_l,
         origin=node_ids,
-        data=_payload_for(keys_local, cfg.payload_dim),
-        valid=jnp.ones((n_local,), bool),
+        data=payload_l,
+        valid=write_mask_l,
         dirty=jnp.zeros((n_local,), bool),
     )
     rows_all: CacheLine = jax.tree.map(
@@ -106,25 +135,51 @@ def fog_shard_tick(
     )
     delivered = bernoulli_loss_mask(k_loss, (n_local, n_total), cfg.loss_prob) \
         if cfg.loss_model != "none" else jnp.ones((n_local, n_total), bool)
+    if spec.has_churn:
+        delivered = delivered & online_l[:, None]   # offline nodes hear nothing
 
-    caches = _insert_own_rows(state.caches, rows_local, t)
-    caches = _merge_directory(caches, rows_all, delivered, t, node_ids=node_ids)
-    gossip_bytes = jnp.float32(n_total * cfg.row_bytes)
+    caches = _insert_own_rows(caches, rows_local, t)
+    # Coherence sweep over the gathered rows (live on mutable workloads;
+    # a counted no-op on the write-once stream).
+    caches, n_coh_l = update_rows(caches, rows_all, delivered, t, node_ids=node_ids)
+    n_coh = jax.lax.psum(n_coh_l, axis)
+    n_writes = jnp.sum(
+        jax.lax.all_gather(write_mask_l, axis, tiled=True).astype(jnp.int32)
+    )
+    gossip_bytes = n_writes.astype(jnp.float32) * cfg.row_bytes
 
     # ---- 2. replicated write-behind enqueue --------------------------------
-    queue, _ = wb.enqueue(
-        state.queue, rows_all.key, rows_all.data_ts, rows_all.origin,
-        jnp.ones((n_total,), bool),
-    )
+    latest_ts = state.latest_ts
+    if spec.mutable:
+        kids_all = jax.lax.all_gather(kids_local, axis, tiled=True)
+        queue, _ = wb.enqueue_keyed(
+            state.queue, kids_all, rows_all.data_ts, rows_all.origin,
+            jnp.asarray(rows_all.valid),
+        )
+        latest_ts = latest_ts.at[
+            jnp.where(jnp.asarray(rows_all.valid), kids_all, spec.key_universe)
+        ].max(rows_all.data_ts, mode="drop")
+    else:
+        queue, _ = wb.enqueue(
+            state.queue, rows_all.key, rows_all.data_ts, rows_all.origin,
+            jnp.ones((n_total,), bool),
+        )
 
     # ---- 3. reads -----------------------------------------------------------
-    reading = ((t + node_ids) % cfg.read_period == 0) & (t > 0)
-    window_ticks = max(1, round(cfg.read_window_keys / n_total))
-    window = jnp.minimum(jnp.int32(window_ticks), jnp.maximum(t, 1))
-    ages = jnp.minimum(jax.random.randint(k_age, (n_local,), 0, window), t)
-    src = jax.random.randint(k_src, (n_local,), 0, n_total, dtype=jnp.int32)
-    r_tick = t - ages
-    r_keys = hash2_u32(r_tick.astype(jnp.uint32), src.astype(jnp.uint32))
+    reading = ((t + node_ids) % cfg.read_period == 0) & (t > 0) & online_l
+    if spec.mutable:
+        kids_r = wl.sample_key_ids(spec, k_age, (n_local,))
+        r_keys = wl.key_hash(kids_r)
+        src = jnp.full((n_local,), -1, jnp.int32)
+        r_tick = jnp.full((n_local,), -1, jnp.int32)
+    else:
+        kids_r = jnp.zeros((n_local,), jnp.int32)
+        window_ticks = max(1, round(cfg.read_window_keys / n_total))
+        window = jnp.minimum(jnp.int32(window_ticks), jnp.maximum(t, 1))
+        ages = jnp.minimum(jax.random.randint(k_age, (n_local,), 0, window), t)
+        src = jax.random.randint(k_src, (n_local,), 0, n_total, dtype=jnp.int32)
+        r_tick = t - ages
+        r_keys = hash2_u32(r_tick.astype(jnp.uint32), src.astype(jnp.uint32))
 
     # local probe
     sidx_l = (r_keys % jnp.uint32(cfg.cache_sets)).astype(jnp.int32)
@@ -133,13 +188,14 @@ def fog_shard_tick(
         match = cache.valid[sidx] & (cache.tags[sidx] == key)
         hit = jnp.any(match) & is_reading
         way = jnp.argmax(match)
+        ts = jnp.where(hit, cache.data_ts[sidx, way], -1)
         s = jnp.where(hit, sidx, cache.num_sets)
         cache = dataclasses.replace(
             cache, last_use=cache.last_use.at[s, way].max(t, mode="drop")
         )
-        return cache, hit
+        return cache, hit, ts
 
-    caches, hit_local = jax.vmap(self_probe)(caches, r_keys, sidx_l, reading)
+    caches, hit_local, ts_local = jax.vmap(self_probe)(caches, r_keys, sidx_l, reading)
     need_fog = reading & ~hit_local
 
     # fog query: gather all queries, probe local shard, reduce by max-ts.
@@ -160,6 +216,8 @@ def fog_shard_tick(
     if cfg.loss_model != "none":
         resp_mask = bernoulli_loss_mask(k_qloss, (n_local, nq), cfg.loss_prob)
         hits_qc = hits_qc & resp_mask
+    if spec.has_churn:
+        hits_qc = hits_qc & online_l[:, None]   # offline responders are silent
     hits_qc = hits_qc & q_need[None, :]
 
     # Soft-coherence resolve: max data_ts wins; ties broken by responder id
@@ -187,10 +245,20 @@ def fog_shard_tick(
     caches = jax.vmap(touch)(caches, hits_qc, way_qc)
 
     # ---- 4. store reads for global misses (replicated computation) ---------
-    q_src = jax.lax.all_gather(src, axis, tiled=True)
-    q_rtick = jax.lax.all_gather(r_tick, axis, tiled=True)
+    # (No writer-ring forwarding here — the distributed runtime keeps the
+    # simpler direct-membership read; the single-host engines own the full
+    # §VI forwarding semantics.)
     store_read = q_need & ~fog_hit_q
-    in_store = (q_rtick * n_total + q_src) < state.store.drained_total
+    if spec.mutable:
+        q_kids = jax.lax.all_gather(kids_r, axis, tiled=True)
+        durable_ts = state.store.table_ts[
+            jnp.clip(q_kids, 0, spec.key_universe - 1)
+        ]
+        in_store = durable_ts >= 0
+    else:
+        q_src = jax.lax.all_gather(src, axis, tiled=True)
+        q_rtick = jax.lax.all_gather(r_tick, axis, tiled=True)
+        in_store = (q_rtick * n_total + q_src) < state.store.drained_total
     found_q = store_read & in_store
     n_store_reads = jnp.sum(store_read.astype(jnp.int32))
     txn = cfg.store.read_txn_bytes(state.store.drained_total)
@@ -204,17 +272,31 @@ def fog_shard_tick(
         return jax.lax.dynamic_slice_in_dim(xs, rank * n_local, n_local, 0)
 
     fill_ok = my(fog_hit_q | found_q)
-    fill_lines = CacheLine(
-        key=r_keys,
-        data_ts=jnp.where(my(fog_hit_q), my(win_ts), r_tick),
-        origin=src,
-        data=jnp.where(
-            my(fog_hit_q)[:, None], my(win_data),
-            _payload_for(r_keys, cfg.payload_dim),
-        ),
-        valid=fill_ok,
-        dirty=jnp.zeros((n_local,), bool),
-    )
+    if spec.mutable:
+        miss_ts = jnp.where(my(found_q), my(durable_ts), -1)
+        fill_lines = CacheLine(
+            key=r_keys,
+            data_ts=jnp.where(my(fog_hit_q), my(win_ts), miss_ts),
+            origin=jnp.full((n_local,), -1, jnp.int32),
+            data=jnp.where(
+                my(fog_hit_q)[:, None], my(win_data),
+                wl.versioned_payload(r_keys, miss_ts, cfg.payload_dim),
+            ),
+            valid=fill_ok,
+            dirty=jnp.zeros((n_local,), bool),
+        )
+    else:
+        fill_lines = CacheLine(
+            key=r_keys,
+            data_ts=jnp.where(my(fog_hit_q), my(win_ts), r_tick),
+            origin=src,
+            data=jnp.where(
+                my(fog_hit_q)[:, None], my(win_data),
+                _payload_for(r_keys, cfg.payload_dim),
+            ),
+            valid=fill_ok,
+            dirty=jnp.zeros((n_local,), bool),
+        )
     from repro.core.flic import insert as _insert
 
     def fill(cache, line):
@@ -222,6 +304,20 @@ def fog_shard_tick(
         return cache
 
     caches = jax.vmap(fill)(caches, fill_lines)
+
+    # Staleness (mutable only): served reads on THIS shard whose version is
+    # older than the key's newest write, psum-reduced to a global count.
+    if spec.mutable:
+        served_l = hit_local | my(fog_hit_q) | my(found_q)
+        got_ts_l = jnp.where(
+            hit_local, ts_local, jnp.where(my(fog_hit_q), my(win_ts), miss_ts)
+        )
+        truth_l = latest_ts[jnp.clip(kids_r, 0, spec.key_universe - 1)]
+        n_stale = jax.lax.psum(
+            jnp.sum((served_l & (got_ts_l < truth_l)).astype(jnp.int32)), axis
+        )
+    else:
+        n_stale = jnp.int32(0)
 
     # ---- 6. writer drain (replicated) ---------------------------------------
     healthy = bs.store_healthy(store, t)
@@ -232,6 +328,11 @@ def fog_shard_tick(
         max_per_tick=cfg.writer_max_per_tick,
     )
     store = bs.commit_writes(store, n_drained, n_calls, None, cfg.store)
+    if spec.mutable:
+        d_kids, d_ts, d_live = wb.drained_entries(
+            queue, n_drained, cfg.writer_max_per_tick
+        )
+        store = bs.commit_keyed_rows(store, d_kids, d_ts, d_live)
 
     # ---- metrics (global, replicated values) --------------------------------
     n_reads = jnp.sum(jax.lax.all_gather(reading, axis, tiled=True).astype(jnp.int32))
@@ -253,18 +354,24 @@ def fog_shard_tick(
         misses=n_store_reads,
         store_found=jnp.sum(found_q.astype(jnp.int32)),
         store_missing=jnp.sum((store_read & ~in_store).astype(jnp.int32)),
-        writes_gen=jnp.int32(n_total),
+        writes_gen=n_writes,
         writes_drained=n_drained,
         queue_depth=queue.size(),
         queue_dropped=queue.dropped,
         store_txn_bytes=wan_rx + wan_tx,
         store_txns=n_store_reads + n_calls,
         read_latency_sum=jnp.float32(0.0),
-        baseline_wan_bytes=jnp.float32(n_total * cfg.row_bytes)
-        + n_reads.astype(jnp.float32) * cfg.store.read_txn_bytes((t + 1) * n_total),
+        baseline_wan_bytes=n_writes.astype(jnp.float32) * cfg.row_bytes
+        + n_reads.astype(jnp.float32)
+        * cfg.store.read_txn_bytes(queue.tail + queue.dropped + queue.coalesced),
+        coherence_updates=n_coh,
+        stale_reads=n_stale,
+        writes_coalesced=queue.coalesced - state.queue.coalesced,
+        churn_rejoins=n_rejoin,
     )
     new_state = FogShardState(
-        caches=caches, queue=queue, store=store, tick=t + 1, rng=state.rng
+        caches=caches, queue=queue, store=store, tick=t + 1, rng=state.rng,
+        latest_ts=latest_ts,
     )
     return new_state, metrics
 
@@ -297,6 +404,7 @@ def run_distributed_sim(
         store=jax.tree.map(lambda _: repl, state.store),
         tick=repl,
         rng=repl,
+        latest_ts=repl,
     )
     other_axes = tuple(a for a in mesh.axis_names if a != axis)
 

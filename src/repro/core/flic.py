@@ -279,6 +279,80 @@ def lookup_rows(
     return caches, res
 
 
+def update_rows(
+    caches: CacheState,
+    rows: CacheLine,
+    delivered: jax.Array,
+    now: jax.Array,
+    node_ids: jax.Array | None = None,
+) -> tuple[CacheState, jax.Array]:
+    """Batched coherence-update sweep: R broadcast rows against N caches.
+
+    The directory policy's coherence traffic (paper §I.A.a): every hearer
+    that already HOLDS a broadcast key updates its resident copy in place iff
+    the incoming ``data_ts`` is strictly newer — no insert, no eviction.  One
+    (N, R, W) gather + one one-hot scatter per touched field.
+
+    ``delivered`` is (N, R) per-(hearer, row) delivery under the loss model;
+    a row is always applied at its origin.  ``node_ids`` maps local cache
+    lanes to global node ids (the distributed runtime passes the shard's).
+
+    Returns (caches, n_updates) — the number of in-place updates applied,
+    which the simulator reports as ``coherence_updates``.  On write-once
+    workloads this pass is a provable no-op and the fused engine skips it;
+    mutable workloads run it every tick.  The no-op claim holds up to 32-bit
+    tag collisions between rows resident at the same hearer (expected
+    colliding pairs ~ rows²/2³³ — ≪1 for every shipped test/benchmark
+    scale); a collision would make the engines diverge on that line only.  Rows sharing a key within one batch scatter identical values
+    (same ts, and payloads are pure functions of (key, ts) —
+    ``workload.versioned_payload``), so duplicate-index order is immaterial.
+    """
+    n = caches.tags.shape[0]
+    if node_ids is None:
+        node_ids = jnp.arange(n, dtype=jnp.int32)
+    keys = jnp.asarray(rows.key, jnp.uint32)                            # (R,)
+    sidx = (keys % jnp.uint32(caches.num_sets)).astype(jnp.int32)       # (R,)
+
+    is_origin = jnp.asarray(rows.origin, jnp.int32)[None, :] == node_ids[:, None]
+    live = jnp.asarray(rows.valid)[None, :] & (delivered | is_origin)   # (N, R)
+
+    set_tags = caches.tags[:, sidx]                                     # (N, R, W)
+    set_valid = caches.valid[:, sidx]
+    match = set_valid & (set_tags == keys[None, :, None])
+    newer = jnp.asarray(rows.data_ts, jnp.int32)[None, :, None] > caches.data_ts[:, sidx]
+    upd = match & newer & live[:, :, None]                              # (N, R, W)
+
+    ways = jnp.argmax(upd, axis=2)                                      # (N, R)
+    do = jnp.any(upd, axis=2)
+    s = jnp.where(do, sidx[None, :], caches.num_sets)                   # OOB drop
+    rows_n = jnp.arange(n)[:, None]
+    ts_nr = jnp.broadcast_to(jnp.asarray(rows.data_ts, jnp.int32)[None, :], (n, keys.shape[0]))
+
+    caches = dataclasses.replace(
+        caches,
+        data_ts=caches.data_ts.at[rows_n, s, ways].set(ts_nr, mode="drop"),
+        last_use=caches.last_use.at[rows_n, s, ways].set(
+            jnp.full_like(ts_nr, now), mode="drop"
+        ),
+        data=caches.data.at[rows_n, s, ways].set(
+            jnp.broadcast_to(rows.data[None], (n, *rows.data.shape)), mode="drop"
+        ),
+    )
+    return caches, jnp.sum(do.astype(jnp.int32))
+
+
+def invalidate_nodes(caches: CacheState, node_mask: jax.Array) -> CacheState:
+    """Cold-start the caches of the masked nodes (churn rejoin, §III churn).
+
+    ``node_mask`` is (N,) over the leading batch axis; masked nodes lose every
+    line (valid=False) — tags/data are left in place but unreachable.
+    """
+    keep = ~jnp.asarray(node_mask, bool)
+    return dataclasses.replace(
+        caches, valid=caches.valid & keep[:, None, None]
+    )
+
+
 def invalidate(cache: CacheState, key: jax.Array) -> CacheState:
     """Drop a key if present (used by serving page-free paths)."""
     key = jnp.asarray(key, jnp.uint32)

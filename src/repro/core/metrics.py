@@ -32,6 +32,11 @@ class TickMetrics:
     hits_queue: jax.Array        # reads served by the writer's pending buffer
     ticks: jax.Array             # ticks aggregated into this row (1, or
     #                              ``metrics_every`` for thinned series)
+    # Scenario-workload observables (all zero on the default stream):
+    coherence_updates: jax.Array  # in-place updates applied by the sweep
+    stale_reads: jax.Array        # served reads older than the key's latest write
+    writes_coalesced: jax.Array   # re-writes merged into a pending ring slot
+    churn_rejoins: jax.Array      # nodes that rejoined (cold) this tick
 
     @staticmethod
     def zeros(ticks: int = 1) -> "TickMetrics":
@@ -46,6 +51,8 @@ class TickMetrics:
             store_txn_bytes=f, store_txns=i,
             read_latency_sum=f, baseline_wan_bytes=f,
             hits_queue=i, ticks=jnp.int32(ticks),
+            coherence_updates=i, stale_reads=i,
+            writes_coalesced=i, churn_rejoins=i,
         )
 
 
@@ -100,6 +107,19 @@ def summarize(series: TickMetrics) -> dict:
         # *synchronous* backing-store round trip (the paper's "<5%" claim).
         "sync_store_request_ratio": float(
             tot.misses / jnp.maximum(tot.reads + tot.writes_gen, 1)
+        ),
+        # Scenario-workload observables (zero on the default stream):
+        "coherence_updates": int(tot.coherence_updates),
+        "writes_coalesced": int(tot.writes_coalesced),
+        "churn_rejoins": int(tot.churn_rejoins),
+        "stale_reads": int(tot.stale_reads),
+        # Per-scenario staleness: fraction of SERVED reads whose data_ts is
+        # older than the latest write of that key (soft-coherence lag).
+        "stale_read_ratio": float(
+            tot.stale_reads
+            / jnp.maximum(
+                tot.hits_local + tot.hits_fog + tot.hits_queue + tot.store_found, 1
+            )
         ),
     }
     return out

@@ -6,7 +6,9 @@ ticks are 1 s; each node writes one fresh row per tick and issues one read
 every ``read_period`` ticks; the single queued writer drains to a simulated
 cloud store under rate limiting and failures.
 
-Workload model (from §III-B, with ambiguities resolved — see DESIGN.md §2):
+Workload model (from §III-B, with ambiguities resolved — see DESIGN.md §2);
+the DEFAULT scenario below is the paper's; ``SimConfig.workload`` selects
+alternative scenarios from ``repro.core.workload`` (DESIGN.md §7):
 
 * Writes: node ``n`` at tick ``t`` generates row key = hash(t, n), broadcast
   to the fog.  **Insert policy** (config):
@@ -34,11 +36,17 @@ Workload model (from §III-B, with ambiguities resolved — see DESIGN.md §2):
 This module holds the FUSED engine (DESIGN.md §3): one batched probe serves
 the local-hit check, the fog broadcast query, and the responder LRU-touch
 scatter; inserts are the batched ``insert_rows`` primitive; the per-tick
-coherence-update pass is skipped because workload keys are write-once (the
-reference engine in ``simulator_ref.py`` retains the seed's per-pass
+coherence-update pass is skipped when workload keys are write-once and runs
+as the batched ``flic.update_rows`` sweep when the scenario can re-write
+(``WorkloadSpec.mutable``).  Mutable scenarios also swap the FIFO-index
+durability arithmetic for the keyed versioned-membership model
+(``_resolve_backstop_keyed`` / ``backing_store.table_ts``) with
+load-store-buffer coalescing in the writer's ring (``wb.enqueue_keyed``).
+The reference engine in ``simulator_ref.py`` retains the seed's per-pass
 structure, and ``tests/test_sim_equivalence.py`` proves both emit identical
-metrics).  The function is pure; everything (losses, outages, workload) is
-driven by a single PRNG key, so runs are exactly reproducible.
+metrics on every scenario.  The function is pure; everything (losses,
+outages, workload) is driven by a single PRNG key, so runs are exactly
+reproducible.
 """
 from __future__ import annotations
 
@@ -50,12 +58,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import backing_store as bs
+from repro.core import workload as wl
 from repro.core import writeback as wb
 from repro.core.cache_state import NULL_TAG, CacheLine, CacheState, empty_cache
 from repro.core.coherence import GilbertElliott, bernoulli_loss_mask, gilbert_elliott_step
-from repro.core.flic import insert_rows
+from repro.core.flic import insert_rows, invalidate_nodes, update_rows
 from repro.core.metrics import TickMetrics, accumulate
 from repro.utils.hashing import hash2_u32
+
+# Payload derivation lives in the workload layer now; keep the old name —
+# the reference engine and distributed runtime import it from here.
+_payload_for = wl.payload_for
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +95,9 @@ class SimConfig:
     # the inline path by first-matching-way — identical on any state
     # reachable via insert/insert_rows (one copy of a key per set).
     probe_backend: Optional[str] = None
+    # Scenario selection (workload.SCENARIOS has named presets); the default
+    # spec is the paper's write-once stream and keeps the PR-1 fast paths.
+    workload: wl.WorkloadSpec = dataclasses.field(default_factory=wl.WorkloadSpec)
     # Modeled latency terms (ticks == seconds), for the Fig. 2 reproduction.
     lat_local: float = 1e-4
     lat_lan_base: float = 2e-3
@@ -114,34 +130,25 @@ class SimState:
     channel: GilbertElliott     # used only under the GE loss model
     tick: jax.Array             # int32
     rng: jax.Array
+    latest_ts: jax.Array        # (K,) int32 — newest write tick per key id
+    #                             (mutable workloads; ground truth for the
+    #                              staleness metric); (0,) for stream
 
 
 def init_sim(cfg: SimConfig) -> SimState:
+    ku = cfg.workload.key_universe if cfg.workload.mutable else 0
     return SimState(
         caches=empty_cache(
             cfg.cache_sets, cfg.cache_ways, cfg.payload_dim, jnp.float32,
             batch=(cfg.n_nodes,),
         ),
-        queue=wb.empty_queue(cfg.queue_capacity),
-        store=bs.init_store(),
+        queue=wb.empty_queue(cfg.queue_capacity, key_universe=ku),
+        store=bs.init_store(key_universe=ku),
         channel=GilbertElliott.init(cfg.n_nodes),
         tick=jnp.int32(0),
         rng=jax.random.PRNGKey(cfg.seed),
+        latest_ts=jnp.full((ku,), -1, jnp.int32),
     )
-
-
-def _payload_for(key: jax.Array, dim: int) -> jax.Array:
-    """Deterministic pseudo-random payload ~ U[0,1) from a key hash.
-
-    The paper's nodes generate "uniformly distributed random data" with the
-    statistics of compressed+encrypted content; deriving lanes from the key
-    hash reproduces that without extra PRNG state.
-    """
-    lanes = hash2_u32(
-        jnp.asarray(key, jnp.uint32)[..., None],
-        jnp.arange(dim, dtype=jnp.uint32),
-    )
-    return lanes.astype(jnp.float32) / jnp.float32(2**32)
 
 
 def _delivery_mask(cfg: SimConfig, channel, rng, shape):
@@ -180,6 +187,41 @@ def _read_draws(cfg: SimConfig, t, k_age, k_src, node_ids):
     return reading, src, r_tick, r_keys
 
 
+# --------------------------------------------------------------------------
+# Mutable-workload (zipf) generation — shared by the fused and reference
+# engines so scenario semantics cannot drift between them.  (The distributed
+# runtime consumes the underlying ``workload`` helpers — masks, sampling,
+# payloads — but keeps its own shard-shaped generation and the simpler
+# direct-membership read path; see distributed.py.)
+# --------------------------------------------------------------------------
+
+def _gen_writes_keyed(cfg: SimConfig, t, node_ids, k_base, online):
+    """One zipf write per active node: returns (rows, key_ids, write_mask)."""
+    spec = cfg.workload
+    n = cfg.n_nodes
+    k_wr = jax.random.fold_in(k_base, 0x57A9)
+    kids = wl.sample_key_ids(spec, k_wr, (n,))
+    keys = wl.key_hash(kids)
+    write_mask = wl.rate_mask(spec, n, t) & online
+    ts = jnp.full((n,), t, jnp.int32)
+    rows = CacheLine(
+        key=keys,
+        data_ts=ts,
+        origin=node_ids,
+        data=wl.versioned_payload(keys, ts, cfg.payload_dim),
+        valid=write_mask,
+        dirty=jnp.zeros((n,), bool),
+    )
+    return rows, kids, write_mask
+
+
+def _read_draws_keyed(cfg: SimConfig, t, k_age, node_ids, online):
+    """Zipf-popularity reads on the staggered schedule (churn-masked)."""
+    reading = ((t + node_ids) % cfg.read_period == 0) & (t > 0) & online
+    kids = wl.sample_key_ids(cfg.workload, k_age, (cfg.n_nodes,))
+    return reading, kids, wl.key_hash(kids)
+
+
 def _resolve_backstop(queue: wb.WriteQueue, store: bs.StoreState,
                       healthy, need_store, enq_idx):
     """Route fog-missed reads to the writer's ring or the backing store.
@@ -205,60 +247,37 @@ def _resolve_backstop(queue: wb.WriteQueue, store: bs.StoreState,
     return queue_hit, store_read, failed, found, in_store
 
 
+def _resolve_backstop_keyed(queue: wb.WriteQueue, store: bs.StoreState,
+                            healthy, need_store, key_ids):
+    """Keyed-durability counterpart of ``_resolve_backstop`` (§VI semantics
+    preserved) for mutable workloads, where a key's durable state is a
+    VERSION, not a FIFO index.
+
+    The writer's slot map gives the monotone enqueue index of each key's most
+    recent ring entry; pending entries forward always, drained-but-resident
+    entries forward only while the store is down, and a real store read
+    consults the keyed membership table.  Returns
+    (queue_hit, store_read, failed, found, served_ts) — ``served_ts`` is the
+    data timestamp of the version actually served (-1 when nothing was).
+    """
+    ku = queue.key_universe
+    kid = jnp.clip(jnp.asarray(key_ids, jnp.int32), 0, ku - 1)
+    slot = queue.slot_of_key[kid]                 # monotone enqueue idx or -1
+    in_pending = (slot >= queue.head) & (slot < queue.tail)
+    in_ring = (slot >= 0) & (slot >= queue.tail - queue.capacity) & (slot < queue.tail)
+    queue_hit = need_store & (in_pending | (~healthy & in_ring))
+    store_read = need_store & ~queue_hit & healthy
+    failed = need_store & ~queue_hit & ~healthy
+    durable_ts = store.table_ts[kid]
+    found = store_read & (durable_ts >= 0)
+    ring_ts = queue.data_ts[jnp.maximum(slot, 0) % queue.capacity]
+    served_ts = jnp.where(queue_hit, ring_ts, jnp.where(found, durable_ts, -1))
+    return queue_hit, store_read, failed, found, served_ts
+
+
 # --------------------------------------------------------------------------
 # Broadcast-merge under the two insert policies.
 # --------------------------------------------------------------------------
-
-def _merge_directory(
-    caches: CacheState, rows: CacheLine, delivered: jax.Array, now,
-    node_ids: jax.Array | None = None,
-) -> CacheState:
-    """Directory policy: payload cached at origin; hearers update resident
-    copies in place iff newer (pure coherence traffic, no insert).
-
-    ``node_ids`` gives the global id of each local cache (defaults to arange;
-    the distributed runtime passes the shard's global ids).
-
-    NOTE: in the tick workload every LOGICAL key is written exactly once, so
-    this pass can never find a resident older copy — the fused engine skips
-    it (DESIGN.md §3); it is kept for the reference engine, the distributed
-    runtime, and any re-write workload.  The no-op claim holds up to 32-bit
-    hash collisions between rows resident at the same hearer (expected
-    colliding pairs ~ rows²/2³³ — ≪1 for every shipped test/benchmark
-    scale); a collision would make the engines diverge on that line only.
-    """
-    n = caches.tags.shape[0]
-    if node_ids is None:
-        node_ids = jnp.arange(n, dtype=jnp.int32)
-
-    def per_node(cache: CacheState, deliv: jax.Array, node_idx) -> CacheState:
-        # (R,) rows against this node's (S, W) cache.
-        is_origin = jnp.asarray(rows.origin, jnp.int32) == node_idx
-        live = jnp.asarray(rows.valid) & (deliv | is_origin)
-
-        sidx = (rows.key % jnp.uint32(cache.num_sets)).astype(jnp.int32)  # (R,)
-        set_tags = cache.tags[sidx]       # (R, W)
-        set_valid = cache.valid[sidx]     # (R, W)
-        match = set_valid & (set_tags == rows.key[:, None])               # (R, W)
-        newer = rows.data_ts[:, None] > cache.data_ts[sidx]               # (R, W)
-        upd = match & newer & live[:, None]                               # (R, W)
-
-        ways = jnp.argmax(upd, axis=1)                                    # (R,)
-        do = jnp.any(upd, axis=1)
-        s = jnp.where(do, sidx, cache.num_sets)  # OOB -> dropped scatter
-
-        def scat(buf, vals):
-            return buf.at[s, ways].set(vals, mode="drop")
-
-        return dataclasses.replace(
-            cache,
-            data_ts=scat(cache.data_ts, jnp.asarray(rows.data_ts, jnp.int32)),
-            last_use=scat(cache.last_use, jnp.full_like(rows.data_ts, now)),
-            data=cache.data.at[s, ways].set(rows.data, mode="drop"),
-        )
-
-    return jax.vmap(per_node)(caches, delivered, node_ids)
-
 
 def _insert_own_rows(caches: CacheState, rows: CacheLine, now) -> CacheState:
     """Each node inserts its own generated row (origin-resident payload).
@@ -346,35 +365,71 @@ def _probe_all_caches(cfg: SimConfig, caches: CacheState, keys_q, sidx_q):
 
 def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMetrics]:
     n = cfg.n_nodes
+    spec = cfg.workload
     t = state.tick
     rng, k_loss, k_age, k_src, k_qloss, k_coll = jax.random.split(state.rng, 6)
     m = TickMetrics.zeros()
-
-    # ---- 1. generate one fresh row per node -------------------------------
     node_ids = jnp.arange(n, dtype=jnp.int32)
-    rows = _gen_rows(cfg, t, node_ids)
-    m = dataclasses.replace(m, writes_gen=jnp.int32(n))
+    caches = state.caches
+    latest_ts = state.latest_ts
+
+    # ---- 0. churn: rejoining nodes cold-start -----------------------------
+    if spec.has_churn:
+        online = wl.online_mask(spec, n, t)
+        rejoin = wl.rejoin_mask(spec, n, t)
+        caches = invalidate_nodes(caches, rejoin)
+        n_rejoin = jnp.sum(rejoin.astype(jnp.int32))
+    else:
+        online = jnp.ones((n,), bool)
+        n_rejoin = jnp.int32(0)
+
+    # ---- 1. generate one fresh row per active node ------------------------
+    if spec.mutable:
+        rows, w_kids, write_mask = _gen_writes_keyed(cfg, t, node_ids, k_loss, online)
+        n_writes = jnp.sum(write_mask.astype(jnp.int32))
+    else:
+        rows = _gen_rows(cfg, t, node_ids)
+        write_mask = jnp.ones((n,), bool)
+        n_writes = jnp.int32(n)
+    m = dataclasses.replace(m, writes_gen=n_writes)
 
     # ---- 2. fog broadcast under the loss model ----------------------------
     channel, delivered = _delivery_mask(cfg, state.channel, k_loss, (n, n))
-    caches = state.caches
+    if spec.has_churn:
+        delivered = delivered & online[:, None]  # offline nodes hear nothing
+    n_coh = jnp.int32(0)
     if cfg.insert_policy == "directory":
-        # Origin-resident payload via ONE batched upsert.  The coherence-
-        # update sweep over hearers is skipped: workload keys are write-once,
-        # so it is a provable no-op (see _merge_directory; equivalence is
-        # asserted against the reference engine which still runs it).
+        # Origin-resident payload via ONE batched upsert.
         caches, _ev = insert_rows(caches, rows, t)
+        if spec.mutable:
+            # The scenario can re-write keys: run the LIVE batched coherence
+            # sweep (hearers update resident older copies in place).
+            caches, n_coh = update_rows(caches, rows, delivered, t)
+        # else: write-once keys — the sweep is a provable no-op and is
+        # skipped (see flic.update_rows; equivalence is asserted against the
+        # reference engine which still runs it).
     else:
         caches = _merge_replicate(caches, rows, delivered, t)
-    lan = jnp.float32(n * cfg.row_bytes)  # N broadcasts on the shared medium
+    lan = n_writes.astype(jnp.float32) * cfg.row_bytes  # broadcasts on the medium
 
     # ---- 3. write-behind enqueue (single writer, §I.A.b) ------------------
-    queue, _acc = wb.enqueue(
-        state.queue, rows.key, rows.data_ts, rows.origin, jnp.ones((n,), bool)
-    )
+    if spec.mutable:
+        queue, _acc = wb.enqueue_keyed(
+            state.queue, w_kids, rows.data_ts, rows.origin, write_mask
+        )
+        latest_ts = latest_ts.at[
+            jnp.where(write_mask, w_kids, spec.key_universe)
+        ].max(rows.data_ts, mode="drop")
+    else:
+        queue, _acc = wb.enqueue(
+            state.queue, rows.key, rows.data_ts, rows.origin, jnp.ones((n,), bool)
+        )
 
     # ---- 4. reads: staggered, one per node per read_period ----------------
-    reading, src, r_tick, r_keys = _read_draws(cfg, t, k_age, k_src, node_ids)
+    if spec.mutable:
+        reading, r_kids, r_keys = _read_draws_keyed(cfg, t, k_age, node_ids, online)
+    else:
+        reading, src, r_tick, r_keys = _read_draws(cfg, t, k_age, k_src, node_ids)
 
     # Reader compaction: the stagger activates exactly the nodes with
     # node ≡ -t (mod read_period), so the tick's readers are an arithmetic
@@ -386,6 +441,8 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
     r_ids = first + p * jnp.arange(r_slots, dtype=jnp.int32)       # (R,)
     slot_ok = (r_ids < n) & (t > 0)
     r_gidx = jnp.minimum(r_ids, n - 1)                             # safe gather
+    if spec.has_churn:
+        slot_ok = slot_ok & online[r_gidx]                         # offline: no read
     keys_q = r_keys[r_gidx]
     sidx_q = (keys_q % jnp.uint32(cfg.cache_sets)).astype(jnp.int32)
 
@@ -405,6 +462,8 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
     if cfg.loss_model != "none":
         _, resp_mask = _delivery_mask(cfg, channel, k_qloss, (n, n))
         hit_fog_cq = hit_fog_cq & resp_mask[r_gidx, :].T           # (C, R)
+    if spec.has_churn:
+        hit_fog_cq = hit_fog_cq & online[:, None]                  # silent offline
     hit_fog_cq = hit_fog_cq & need_fog_slot[None, :]
     ts_fog = jnp.where(hit_fog_cq, ts_cq, -1)
 
@@ -430,10 +489,17 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
     # 4c. writer-buffer forwarding, then the backing store (§VI).
     healthy = bs.store_healthy(state.store, t)
     need_store_slot = need_fog_slot & ~fog_hit_slot
-    enq_idx_slot = r_tick[r_gidx] * n + src[r_gidx]
-    queue_hit_slot, store_read_slot, failed_slot, found_slot, _ = _resolve_backstop(
-        queue, state.store, healthy, need_store_slot, enq_idx_slot
-    )
+    if spec.mutable:
+        kids_q = r_kids[r_gidx]
+        (queue_hit_slot, store_read_slot, failed_slot, found_slot,
+         served_ts_slot) = _resolve_backstop_keyed(
+            queue, state.store, healthy, need_store_slot, kids_q
+        )
+    else:
+        enq_idx_slot = r_tick[r_gidx] * n + src[r_gidx]
+        queue_hit_slot, store_read_slot, failed_slot, found_slot, _ = _resolve_backstop(
+            queue, state.store, healthy, need_store_slot, enq_idx_slot
+        )
     n_store_reads = jnp.sum(store_read_slot.astype(jnp.int32))
     n_queue_hits = jnp.sum(queue_hit_slot.astype(jnp.int32))
     n_failed = jnp.sum(failed_slot.astype(jnp.int32))
@@ -451,26 +517,53 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
     # Payload lanes are derived only for the R reader slots (non-slot lanes
     # are valid=False in fill_lines, so their data is never read).
     fill_ok_slot = fog_hit_slot | queue_hit_slot | found_slot
-    slot_payload = jnp.where(
-        fog_hit_slot[:, None], best_payload_slot,
-        _payload_for(keys_q, cfg.payload_dim),                     # (R, D)
-    )
+    if spec.mutable:
+        # Queue/store fills carry the VERSION actually served; payloads are
+        # re-derived from (key, version) — identical to what the origin wrote.
+        slot_payload = jnp.where(
+            fog_hit_slot[:, None], best_payload_slot,
+            wl.versioned_payload(keys_q, served_ts_slot, cfg.payload_dim),
+        )
+        fill_ts_slot = jnp.where(fog_hit_slot, best_ts_slot, served_ts_slot)
+        fill_ts = jnp.full((n,), -1, jnp.int32).at[r_ids].set(
+            fill_ts_slot, mode="drop"
+        )
+        fill_origin = jnp.full((n,), -1, jnp.int32)
+    else:
+        slot_payload = jnp.where(
+            fog_hit_slot[:, None], best_payload_slot,
+            _payload_for(keys_q, cfg.payload_dim),                 # (R, D)
+        )
+        fill_ts = r_tick.at[r_ids].set(
+            jnp.where(fog_hit_slot, best_ts_slot, r_tick[r_gidx]), mode="drop"
+        )
+        fill_origin = src
     fill_data = jnp.zeros((n, cfg.payload_dim), jnp.float32).at[r_ids].set(
         slot_payload, mode="drop"
-    )
-    fill_ts = r_tick.at[r_ids].set(
-        jnp.where(fog_hit_slot, best_ts_slot, r_tick[r_gidx]), mode="drop"
     )
     fill_valid = jnp.zeros((n,), bool).at[r_ids].set(fill_ok_slot, mode="drop")
     fill_lines = CacheLine(
         key=r_keys,
         data_ts=fill_ts,
-        origin=src,
+        origin=fill_origin,
         data=fill_data,
         valid=fill_valid,
         dirty=jnp.zeros((n,), bool),
     )
     caches, _ev = insert_rows(caches, fill_lines, t)
+
+    # 4e. staleness: served reads whose version is older than the newest
+    # write of that key (the soft-coherence lag the paper accepts, §I.A.a).
+    if spec.mutable:
+        served_slot = hit_local_slot | fog_hit_slot | queue_hit_slot | found_slot
+        got_ts_slot = jnp.where(
+            hit_local_slot, ts_cq[r_gidx, slots],
+            jnp.where(fog_hit_slot, best_ts_slot, served_ts_slot),
+        )
+        truth_slot = latest_ts[jnp.clip(kids_q, 0, spec.key_universe - 1)]
+        n_stale = jnp.sum((served_slot & (got_ts_slot < truth_slot)).astype(jnp.int32))
+    else:
+        n_stale = jnp.int32(0)
 
     # ---- 5. writer drain + store commit ------------------------------------
     queue, n_drained, n_calls = wb.drain(
@@ -480,6 +573,11 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
         max_per_tick=cfg.writer_max_per_tick,
     )
     store = bs.commit_writes(store, n_drained, n_calls, k_coll, cfg.store)
+    if spec.mutable:
+        d_kids, d_ts, d_live = wb.drained_entries(
+            queue, n_drained, cfg.writer_max_per_tick
+        )
+        store = bs.commit_keyed_rows(store, d_kids, d_ts, d_live)
     wan_tx = cfg.store.write_txn_bytes(n_drained)
 
     # ---- 6. latency model + baseline accounting ----------------------------
@@ -493,9 +591,12 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
         + (n_store_reads + n_failed).astype(jnp.float32) * cfg.lat_store
     )
     # Baseline: no fog cache — every write and every read goes to the store.
-    baseline_table_rows = (t + 1) * n
+    # The baseline table appends EVERY generated write (no coalescing), i.e.
+    # all accepted + coalesced + dropped enqueues so far; on the default
+    # stream this is exactly the old (t + 1) * n.
+    baseline_table_rows = queue.tail + queue.dropped + queue.coalesced
     baseline = (
-        jnp.float32(n * cfg.row_bytes)
+        n_writes.astype(jnp.float32) * cfg.row_bytes
         + n_reads.astype(jnp.float32) * cfg.store.read_txn_bytes(baseline_table_rows)
     )
 
@@ -518,10 +619,14 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
         store_txns=n_store_reads + n_calls,
         read_latency_sum=lat,
         baseline_wan_bytes=baseline,
+        coherence_updates=n_coh,
+        stale_reads=n_stale,
+        writes_coalesced=queue.coalesced - state.queue.coalesced,
+        churn_rejoins=n_rejoin,
     )
     new_state = SimState(
         caches=caches, queue=queue, store=store, channel=channel,
-        tick=t + 1, rng=rng,
+        tick=t + 1, rng=rng, latest_ts=latest_ts,
     )
     return new_state, metrics
 

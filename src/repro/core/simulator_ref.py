@@ -1,20 +1,24 @@
-"""Reference (pre-fusion) fog tick — the seed pipeline, kept verbatim.
+"""Reference (pre-fusion) fog tick — the seed pipeline, kept per-pass.
 
-This is the simulator exactly as it was before the fused engine landed
+This is the simulator in the shape it had before the fused engine landed
 (DESIGN.md §3): per-pass structure with ``vmap``-of-scalar inserts, a
 separate local probe, a full (C, N, W) fog probe, a second responder-touch
-traversal, and the per-tick directory coherence sweep.  It exists for two
-reasons:
+traversal, and the per-tick directory coherence sweep (now the promoted
+``flic.update_rows`` primitive — the sweep is NEVER skipped here, which is
+what makes the fused engine's write-once skip an asserted theorem rather
+than an assumption).  It exists for two reasons:
 
 * ``tests/test_sim_equivalence.py`` asserts the fused engine emits a
   bit-identical ``TickMetrics`` series against this path (same PRNG stream,
   same tie-breaks: first-matching-way, first-invalid-else-LRU victim,
-  strictly-newer timestamp wins);
+  strictly-newer timestamp wins) — across every ``WorkloadSpec`` scenario;
 * ``benchmarks/sim_bench.py`` uses it as the old-path baseline.
 
-The read backstop (writer-ring forwarding + store-health gating, §VI) is
-shared with the fused engine via ``simulator._resolve_backstop`` so the
-semantics cannot drift.  Do not "optimize" this file.
+Scenario semantics (zipf popularity, rate modulation, churn, keyed
+durability, staleness) are routed through the SAME shared helpers as the
+fused engine (``workload.py``, ``_gen_writes_keyed``, ``_read_draws_keyed``,
+``_resolve_backstop_keyed``) so they cannot drift between engines.  Do not
+"optimize" this file.
 """
 from __future__ import annotations
 
@@ -24,51 +28,89 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import backing_store as bs
+from repro.core import workload as wl
 from repro.core import writeback as wb
 from repro.core.cache_state import CacheLine, CacheState
+from repro.core.flic import invalidate_nodes, update_rows
 from repro.core.metrics import TickMetrics
 from repro.core.simulator import (
     SimConfig,
     SimState,
     _delivery_mask,
     _gen_rows,
+    _gen_writes_keyed,
     _insert_own_rows,
-    _merge_directory,
     _merge_replicate,
     _payload_for,
     _read_draws,
+    _read_draws_keyed,
     _resolve_backstop,
+    _resolve_backstop_keyed,
 )
 
 
 def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMetrics]:
     n = cfg.n_nodes
+    spec = cfg.workload
     t = state.tick
     rng, k_loss, k_age, k_src, k_qloss, k_coll = jax.random.split(state.rng, 6)
     m = TickMetrics.zeros()
-
-    # ---- 1. generate one fresh row per node -------------------------------
     node_ids = jnp.arange(n, dtype=jnp.int32)
-    rows = _gen_rows(cfg, t, node_ids)
-    m = dataclasses.replace(m, writes_gen=jnp.int32(n))
+    caches = state.caches
+    latest_ts = state.latest_ts
+
+    # ---- 0. churn: rejoining nodes cold-start -----------------------------
+    if spec.has_churn:
+        online = wl.online_mask(spec, n, t)
+        rejoin = wl.rejoin_mask(spec, n, t)
+        caches = invalidate_nodes(caches, rejoin)
+        n_rejoin = jnp.sum(rejoin.astype(jnp.int32))
+    else:
+        online = jnp.ones((n,), bool)
+        n_rejoin = jnp.int32(0)
+
+    # ---- 1. generate one fresh row per active node ------------------------
+    if spec.mutable:
+        rows, w_kids, write_mask = _gen_writes_keyed(cfg, t, node_ids, k_loss, online)
+        n_writes = jnp.sum(write_mask.astype(jnp.int32))
+    else:
+        rows = _gen_rows(cfg, t, node_ids)
+        write_mask = jnp.ones((n,), bool)
+        n_writes = jnp.int32(n)
+    m = dataclasses.replace(m, writes_gen=n_writes)
 
     # ---- 2. fog broadcast under the loss model ----------------------------
     channel, delivered = _delivery_mask(cfg, state.channel, k_loss, (n, n))
-    caches = state.caches
+    if spec.has_churn:
+        delivered = delivered & online[:, None]
+    n_coh = jnp.int32(0)
     if cfg.insert_policy == "directory":
         caches = _insert_own_rows(caches, rows, t)
-        caches = _merge_directory(caches, rows, delivered, t)
+        # The seed's per-tick coherence sweep, ALWAYS run here (write-once
+        # workloads make it a counted no-op; mutable workloads make it live).
+        caches, n_coh = update_rows(caches, rows, delivered, t)
     else:
         caches = _merge_replicate(caches, rows, delivered, t)
-    lan = jnp.float32(n * cfg.row_bytes)  # N broadcasts on the shared medium
+    lan = n_writes.astype(jnp.float32) * cfg.row_bytes
 
     # ---- 3. write-behind enqueue (single writer, §I.A.b) ------------------
-    queue, _acc = wb.enqueue(
-        state.queue, rows.key, rows.data_ts, rows.origin, jnp.ones((n,), bool)
-    )
+    if spec.mutable:
+        queue, _acc = wb.enqueue_keyed(
+            state.queue, w_kids, rows.data_ts, rows.origin, write_mask
+        )
+        latest_ts = latest_ts.at[
+            jnp.where(write_mask, w_kids, spec.key_universe)
+        ].max(rows.data_ts, mode="drop")
+    else:
+        queue, _acc = wb.enqueue(
+            state.queue, rows.key, rows.data_ts, rows.origin, jnp.ones((n,), bool)
+        )
 
     # ---- 4. reads: staggered, one per node per read_period ----------------
-    reading, src, r_tick, r_keys = _read_draws(cfg, t, k_age, k_src, node_ids)
+    if spec.mutable:
+        reading, r_kids, r_keys = _read_draws_keyed(cfg, t, k_age, node_ids, online)
+    else:
+        reading, src, r_tick, r_keys = _read_draws(cfg, t, k_age, k_src, node_ids)
 
     # 4a. local probe (vectorized over nodes); LRU refreshed only for nodes
     # actually reading this tick.
@@ -77,13 +119,14 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
         match = cache.valid[sidx] & (cache.tags[sidx] == key)
         hit = jnp.any(match) & is_reading
         way = jnp.argmax(match)
+        ts = jnp.where(hit, cache.data_ts[sidx, way], -1)
         s = jnp.where(hit, sidx, cache.num_sets)
         cache = dataclasses.replace(
             cache, last_use=cache.last_use.at[s, way].max(t, mode="drop")
         )
-        return cache, hit
+        return cache, hit, ts
 
-    caches, hit_local = jax.vmap(self_probe)(caches, r_keys, reading)
+    caches, hit_local, ts_local = jax.vmap(self_probe)(caches, r_keys, reading)
 
     # 4b. fog query for local misses: reader q probes every cache c.
     need_fog = reading & ~hit_local
@@ -108,6 +151,8 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
         _, resp_mask = _delivery_mask(cfg, channel, k_qloss, (n, n))
         hits_qc = hits_qc & resp_mask
         ts_qc = jnp.where(hits_qc, ts_qc, -1)
+    if spec.has_churn:
+        hits_qc = hits_qc & online[None, :]   # offline responders are silent
     best_c = jnp.argmax(jnp.where(hits_qc, ts_qc, -1), axis=1)            # (Q,)
     fog_hit = need_fog & jnp.any(hits_qc, axis=1)
     best_payload = data_qc[best_c, jnp.arange(n)]                         # (Q, D)
@@ -132,10 +177,15 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
     # 4c. writer-buffer forwarding, then the backing store (§VI).
     healthy = bs.store_healthy(state.store, t)
     need_store = need_fog & ~fog_hit
-    enq_idx = r_tick * n + src  # FIFO enqueue order = (tick, node)
-    queue_hit, store_read, failed, found, _ = _resolve_backstop(
-        queue, state.store, healthy, need_store, enq_idx
-    )
+    if spec.mutable:
+        queue_hit, store_read, failed, found, served_ts = _resolve_backstop_keyed(
+            queue, state.store, healthy, need_store, r_kids
+        )
+    else:
+        enq_idx = r_tick * n + src  # FIFO enqueue order = (tick, node)
+        queue_hit, store_read, failed, found, _ = _resolve_backstop(
+            queue, state.store, healthy, need_store, enq_idx
+        )
     n_store_reads = jnp.sum(store_read.astype(jnp.int32))
     n_queue_hits = jnp.sum(queue_hit.astype(jnp.int32))
     n_failed = jnp.sum(failed.astype(jnp.int32))
@@ -151,14 +201,27 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
 
     # 4d. fill the reader's local cache from fog/queue/store responses.
     fill_ok = fog_hit | queue_hit | found
-    fill_lines = CacheLine(
-        key=r_keys,
-        data_ts=jnp.where(fog_hit, best_ts, r_tick),
-        origin=src,
-        data=jnp.where(fog_hit[:, None], best_payload, _payload_for(r_keys, cfg.payload_dim)),
-        valid=fill_ok,
-        dirty=jnp.zeros((n,), bool),
-    )
+    if spec.mutable:
+        fill_lines = CacheLine(
+            key=r_keys,
+            data_ts=jnp.where(fog_hit, best_ts, served_ts),
+            origin=jnp.full((n,), -1, jnp.int32),
+            data=jnp.where(
+                fog_hit[:, None], best_payload,
+                wl.versioned_payload(r_keys, served_ts, cfg.payload_dim),
+            ),
+            valid=fill_ok,
+            dirty=jnp.zeros((n,), bool),
+        )
+    else:
+        fill_lines = CacheLine(
+            key=r_keys,
+            data_ts=jnp.where(fog_hit, best_ts, r_tick),
+            origin=src,
+            data=jnp.where(fog_hit[:, None], best_payload, _payload_for(r_keys, cfg.payload_dim)),
+            valid=fill_ok,
+            dirty=jnp.zeros((n,), bool),
+        )
 
     from repro.core.flic import insert as _insert
 
@@ -168,6 +231,17 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
 
     caches = jax.vmap(fill)(caches, fill_lines)
 
+    # 4e. staleness: served reads older than the key's newest write.
+    if spec.mutable:
+        served = hit_local | fog_hit | queue_hit | found
+        got_ts = jnp.where(
+            hit_local, ts_local, jnp.where(fog_hit, best_ts, served_ts)
+        )
+        truth = latest_ts[jnp.clip(r_kids, 0, spec.key_universe - 1)]
+        n_stale = jnp.sum((served & (got_ts < truth)).astype(jnp.int32))
+    else:
+        n_stale = jnp.int32(0)
+
     # ---- 5. writer drain + store commit ------------------------------------
     queue, n_drained, n_calls = wb.drain(
         queue, t, healthy,
@@ -176,6 +250,11 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
         max_per_tick=cfg.writer_max_per_tick,
     )
     store = bs.commit_writes(store, n_drained, n_calls, k_coll, cfg.store)
+    if spec.mutable:
+        d_kids, d_ts, d_live = wb.drained_entries(
+            queue, n_drained, cfg.writer_max_per_tick
+        )
+        store = bs.commit_keyed_rows(store, d_kids, d_ts, d_live)
     wan_tx = cfg.store.write_txn_bytes(n_drained)
 
     # ---- 6. latency model + baseline accounting ----------------------------
@@ -187,9 +266,9 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
         + (n_store_reads + n_failed).astype(jnp.float32) * cfg.lat_store
     )
     # Baseline: no fog cache — every write and every read goes to the store.
-    baseline_table_rows = (t + 1) * n
+    baseline_table_rows = queue.tail + queue.dropped + queue.coalesced
     baseline = (
-        jnp.float32(n * cfg.row_bytes)
+        n_writes.astype(jnp.float32) * cfg.row_bytes
         + n_reads.astype(jnp.float32) * cfg.store.read_txn_bytes(baseline_table_rows)
     )
 
@@ -212,9 +291,13 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
         store_txns=n_store_reads + n_calls,
         read_latency_sum=lat,
         baseline_wan_bytes=baseline,
+        coherence_updates=n_coh,
+        stale_reads=n_stale,
+        writes_coalesced=queue.coalesced - state.queue.coalesced,
+        churn_rejoins=n_rejoin,
     )
     new_state = SimState(
         caches=caches, queue=queue, store=store, channel=channel,
-        tick=t + 1, rng=rng,
+        tick=t + 1, rng=rng, latest_ts=latest_ts,
     )
     return new_state, metrics

@@ -1,0 +1,231 @@
+"""Scenario-driven workload layer for the fog simulation.
+
+The paper's evaluation (§III-B) runs exactly ONE workload: every node writes
+one brand-new key per tick and reads uniformly-recent keys at a fixed rate.
+That workload has two special properties the engines exploit:
+
+* keys are **write-once**, so the per-tick coherence-update sweep is a
+  provable no-op (the fused engine skips it, DESIGN.md §3);
+* the single FIFO writer makes durability of row ``(t, n)`` the integer test
+  ``t*N + n < drained_total``.
+
+A ``WorkloadSpec`` generalizes the workload along four axes — the paper's
+stream plus the standard caching-literature scenarios (cf. Icarus'
+Zipf-``alpha`` ``StationaryWorkload``):
+
+* **popularity** — ``"stream"`` (the paper's write-once key-per-tick-per-node
+  stream) or ``"zipf"`` (truncated Zipf-``alpha`` over a bounded key universe;
+  keys are RE-written, which makes the coherence pass live and forces keyed
+  versioned durability — see ``writeback.enqueue_keyed`` /
+  ``backing_store.commit_keyed_rows``);
+* **read recency** — stream reads sample uniform ages over the directory
+  window (the paper's model); zipf reads sample the same Zipf popularity
+  (read-what's-popular, Icarus-style);
+* **rate** — ``"steady"`` | ``"bursty"`` (duty-cycled write windows) |
+  ``"diurnal"`` (a sinusoidally varying fraction of nodes is active);
+* **churn** — a deterministic rotating block of nodes leaves and rejoins;
+  rejoining nodes COLD-START (their caches are invalidated) and re-enter the
+  staggered read schedule.
+
+Rate modulation and churn require ``popularity="zipf"``: the stream
+workload's FIFO-index durability arithmetic is only exact when every (tick,
+node) cell is written, so mutable-universe scenarios carry the keyed model
+instead.  ``WorkloadSpec`` enforces this at construction.
+
+Everything here is a pure function of ``(spec, tick)`` plus an explicit PRNG
+key, shared verbatim by the fused engine, the reference engine and the
+distributed runtime so scenario semantics cannot drift between them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.hashing import hash2_u32
+
+# Salt separating the zipf key-id hash domain from the stream (t, n) domain.
+KEY_SALT = 0x5A1FCA5E
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Static description of one scenario (hashable: jit-static on SimConfig)."""
+
+    popularity: Literal["stream", "zipf"] = "stream"
+    key_universe: int = 4096         # zipf: bounded key space |K|
+    zipf_alpha: float = 0.9          # zipf: skew (Icarus' alpha)
+    rate: Literal["steady", "bursty", "diurnal"] = "steady"
+    rate_period: int = 60            # bursty/diurnal modulation period (ticks)
+    rate_duty: float = 0.5           # bursty: fraction of the period with writes on
+    rate_floor: float = 0.25         # diurnal: minimum active-node fraction
+    churn_period: int = 0            # ticks per churn epoch; 0 = no churn
+    churn_fraction: float = 0.2      # fraction of nodes offline each epoch
+
+    def __post_init__(self):
+        if self.popularity == "stream" and (self.rate != "steady" or self.churn_period > 0):
+            raise ValueError(
+                "rate modulation / churn require popularity='zipf': the "
+                "write-once stream's FIFO-index durability is only exact when "
+                "every (tick, node) cell is written (see module docstring)"
+            )
+        if self.popularity == "zipf" and self.key_universe < 2:
+            raise ValueError("zipf key_universe must be >= 2")
+        if self.churn_period > 0 and not (0.0 < self.churn_fraction < 1.0):
+            raise ValueError("churn_fraction must be in (0, 1) when churn is on")
+
+    @property
+    def mutable(self) -> bool:
+        """Keys can be re-written -> live coherence pass + keyed durability."""
+        return self.popularity == "zipf"
+
+    @property
+    def has_churn(self) -> bool:
+        return self.churn_period > 0
+
+
+# Named presets used by tests, benchmarks and the example driver.
+SCENARIOS: dict[str, WorkloadSpec] = {
+    # the paper's §III-B workload — bit-identical to the pre-workload engines
+    "paper": WorkloadSpec(),
+    # skewed mutable universe: re-writes make the coherence pass live
+    "zipf": WorkloadSpec(popularity="zipf", key_universe=4096, zipf_alpha=0.9),
+    # hotter skew over a tighter universe (stress soft coherence + coalescing)
+    "zipf_hot": WorkloadSpec(popularity="zipf", key_universe=512, zipf_alpha=1.2),
+    # duty-cycled write bursts (write storms then silence)
+    "bursty": WorkloadSpec(
+        popularity="zipf", key_universe=2048, zipf_alpha=0.9,
+        rate="bursty", rate_period=60, rate_duty=0.33,
+    ),
+    # sinusoidal daily load curve on the active-node count
+    "diurnal": WorkloadSpec(
+        popularity="zipf", key_universe=2048, zipf_alpha=0.9,
+        rate="diurnal", rate_period=240, rate_floor=0.25,
+    ),
+    # rolling node churn: a rotating block leaves, rejoins cold
+    "churn": WorkloadSpec(
+        popularity="zipf", key_universe=2048, zipf_alpha=0.9,
+        churn_period=120, churn_fraction=0.2,
+    ),
+    # everything at once
+    "storm": WorkloadSpec(
+        popularity="zipf", key_universe=1024, zipf_alpha=1.1,
+        rate="bursty", rate_period=80, rate_duty=0.5,
+        churn_period=100, churn_fraction=0.25,
+    ),
+}
+
+
+# --------------------------------------------------------------------------
+# Payload derivation (moved here from the simulator so every runtime shares
+# one definition; versioned payloads make re-writes content-distinguishable).
+# --------------------------------------------------------------------------
+
+def payload_for(key: jax.Array, dim: int) -> jax.Array:
+    """Deterministic pseudo-random payload ~ U[0,1) from a key hash.
+
+    The paper's nodes generate "uniformly distributed random data" with the
+    statistics of compressed+encrypted content; deriving lanes from the key
+    hash reproduces that without extra PRNG state.
+    """
+    lanes = hash2_u32(
+        jnp.asarray(key, jnp.uint32)[..., None],
+        jnp.arange(dim, dtype=jnp.uint32),
+    )
+    return lanes.astype(jnp.float32) / jnp.float32(2**32)
+
+
+def versioned_payload(key: jax.Array, data_ts: jax.Array, dim: int) -> jax.Array:
+    """Payload of VERSION ``data_ts`` of a mutable key.
+
+    Pure in (key, ts): two nodes writing the same key in the same tick agree
+    on content, so duplicate coherence scatters are value-identical (and
+    therefore order-independent) by construction.
+    """
+    return payload_for(
+        hash2_u32(jnp.asarray(key, jnp.uint32),
+                  jnp.asarray(data_ts, jnp.int32).astype(jnp.uint32)),
+        dim,
+    )
+
+
+# --------------------------------------------------------------------------
+# Truncated-Zipf popularity.
+# --------------------------------------------------------------------------
+
+def zipf_cdf(spec: WorkloadSpec) -> jax.Array:
+    """CDF of the truncated Zipf(alpha) pmf over ``key_universe`` ids."""
+    ranks = jnp.arange(1, spec.key_universe + 1, dtype=jnp.float32)
+    w = ranks ** jnp.float32(-spec.zipf_alpha)
+    return jnp.cumsum(w) / jnp.sum(w)
+
+
+def sample_key_ids(spec: WorkloadSpec, rng: jax.Array, shape) -> jax.Array:
+    """Zipf-distributed key ids in [0, key_universe) via inverse CDF."""
+    u = jax.random.uniform(rng, shape)
+    ids = jnp.searchsorted(zipf_cdf(spec), u)
+    return jnp.clip(ids, 0, spec.key_universe - 1).astype(jnp.int32)
+
+
+def key_hash(key_ids: jax.Array) -> jax.Array:
+    """The cache-line key (uint32) of a zipf key id."""
+    return hash2_u32(jnp.asarray(key_ids, jnp.uint32), jnp.uint32(KEY_SALT))
+
+
+# --------------------------------------------------------------------------
+# Deterministic node-activity masks: rate modulation + churn.
+# --------------------------------------------------------------------------
+
+def rate_mask(
+    spec: WorkloadSpec, n: int, t: jax.Array, node_ids: jax.Array | None = None
+) -> jax.Array:
+    """Which (global-id) nodes generate a write this tick.
+
+    ``n`` is the TOTAL fog size; ``node_ids`` selects a subset of lanes (the
+    distributed runtime passes its shard's global ids; default all N).
+    """
+    node = jnp.arange(n, dtype=jnp.int32) if node_ids is None else jnp.asarray(node_ids, jnp.int32)
+    if spec.rate == "steady":
+        return jnp.ones(node.shape, bool)
+    if spec.rate == "bursty":
+        on_ticks = max(1, int(round(spec.rate_period * spec.rate_duty)))
+        return jnp.broadcast_to((t % spec.rate_period) < on_ticks, node.shape)
+    # diurnal: the first ``active(t)`` node ids write; active count follows a
+    # raised sinusoid between floor*N and N.
+    phase = 2.0 * jnp.pi * (jnp.asarray(t, jnp.float32) / jnp.float32(spec.rate_period))
+    frac = spec.rate_floor + (1.0 - spec.rate_floor) * 0.5 * (1.0 + jnp.sin(phase))
+    active = jnp.ceil(jnp.float32(n) * frac).astype(jnp.int32)
+    return node < active
+
+
+def online_mask(
+    spec: WorkloadSpec, n: int, t: jax.Array, node_ids: jax.Array | None = None
+) -> jax.Array:
+    """Which (global-id) nodes are members of the fog this tick.
+
+    A rotating block of ``round(N * churn_fraction)`` nodes is offline each
+    churn epoch; the block slides by its own size every epoch, so membership
+    is a pure deterministic function of the tick.
+    """
+    node = jnp.arange(n, dtype=jnp.int32) if node_ids is None else jnp.asarray(node_ids, jnp.int32)
+    if not spec.has_churn:
+        return jnp.ones(node.shape, bool)
+    m = max(1, min(n - 1, int(round(n * spec.churn_fraction))))
+    epoch = jnp.asarray(t, jnp.int32) // spec.churn_period
+    start = (epoch * m) % n
+    pos = (node - start) % n
+    return pos >= m
+
+
+def rejoin_mask(
+    spec: WorkloadSpec, n: int, t: jax.Array, node_ids: jax.Array | None = None
+) -> jax.Array:
+    """Nodes that came back online THIS tick (cold-start their caches)."""
+    node = jnp.arange(n, dtype=jnp.int32) if node_ids is None else jnp.asarray(node_ids, jnp.int32)
+    if not spec.has_churn:
+        return jnp.zeros(node.shape, bool)
+    t = jnp.asarray(t, jnp.int32)
+    back = online_mask(spec, n, t, node) & ~online_mask(spec, n, t - 1, node)
+    return back & (t > 0)

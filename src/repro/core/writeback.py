@@ -11,6 +11,14 @@ reads from the ring via ``simulator._resolve_backstop``, DESIGN.md §2).
 Static shapes: the queue stores (key, data_ts, origin) triples in fixed-size
 rings with monotone head/tail counters.  Payload bytes are accounted, not
 materialized (the store is simulated — ``backing_store.py``).
+
+Mutable-key workloads (``workload.WorkloadSpec.mutable``) use the KEYED mode:
+``empty_queue(capacity, key_universe=K)`` adds a per-key slot map, and
+``enqueue_keyed`` COALESCES a re-write of a still-pending key into its
+existing ring slot instead of appending — exactly a CPU load-store buffer
+merging stores to the same address (the paper's §II-D analogy).  Coalesced
+writes are counted in the cumulative ``coalesced`` counter; FIFO drain order
+and the drain routine itself are unchanged.
 """
 from __future__ import annotations
 
@@ -32,16 +40,27 @@ class WriteQueue:
     backoff: jax.Array   # int32 — current backoff window (ticks); 0 = healthy
     next_retry: jax.Array  # int32 — tick at which the writer may retry
     tokens: jax.Array    # float32 — API-call token bucket
+    # Keyed mode only ((K,) / scalar; K=0 rings carry empty placeholders):
+    slot_of_key: jax.Array  # (K,) int32 — MONOTONE enqueue index of the most
+    #                         recent entry for key id k (-1 = never enqueued)
+    coalesced: jax.Array    # int32 — cumulative re-writes merged into a
+    #                         pending slot instead of appended
 
     @property
     def capacity(self) -> int:
         return self.keys.shape[0]
 
+    @property
+    def key_universe(self) -> int:
+        return self.slot_of_key.shape[0]
+
     def size(self) -> jax.Array:
         return self.tail - self.head
 
 
-def empty_queue(capacity: int) -> WriteQueue:
+def empty_queue(capacity: int, key_universe: int = 0) -> WriteQueue:
+    """A fresh ring.  ``key_universe > 0`` enables the keyed/coalescing mode
+    (``enqueue_keyed``); plain ``enqueue`` does not maintain the slot map."""
     return WriteQueue(
         keys=jnp.zeros((capacity,), jnp.uint32),
         data_ts=jnp.zeros((capacity,), jnp.int32),
@@ -52,6 +71,8 @@ def empty_queue(capacity: int) -> WriteQueue:
         backoff=jnp.int32(0),
         next_retry=jnp.int32(0),
         tokens=jnp.float32(0.0),
+        slot_of_key=jnp.full((key_universe,), -1, jnp.int32),
+        coalesced=jnp.int32(0),
     )
 
 
@@ -138,3 +159,103 @@ def drain(
         next_retry=next_retry,
     )
     return q, n, calls
+
+
+# --------------------------------------------------------------------------
+# Keyed mode: versioned per-key slots with load-store-buffer coalescing.
+# --------------------------------------------------------------------------
+
+def enqueue_keyed(
+    q: WriteQueue, key_ids: jax.Array, data_ts: jax.Array, origin: jax.Array,
+    mask: jax.Array,
+) -> tuple[WriteQueue, jax.Array]:
+    """Push a batch of keyed writes, coalescing re-writes of pending keys.
+
+    ``key_ids`` are ids in ``[0, key_universe)`` (stored in the ring's
+    ``keys`` field).  Per masked lane, in order:
+
+    * a LATER lane in the same batch writing the same key supersedes this one
+      (in-batch coalesce — last writer wins; with versioned payloads both
+      carry identical content, so this is pure dedup);
+    * if the key already has a PENDING ring slot, the slot is updated in
+      place (cross-tick coalesce) — head/tail don't move;
+    * otherwise the write is appended as usual (drops counted on overflow)
+      and the slot map records its monotone enqueue index.
+
+    Returns (queue, n_appended).  Coalesced lanes accumulate into
+    ``q.coalesced``; the invariant ``writes == appended + coalesced +
+    dropped`` holds per call.
+    """
+    cap = q.capacity
+    ku = q.key_universe
+    assert ku > 0, "enqueue_keyed requires empty_queue(..., key_universe=K)"
+    kid = jnp.asarray(key_ids, jnp.int32)
+    mask = jnp.asarray(mask, bool)
+    r = kid.shape[0]
+    order = jnp.arange(r, dtype=jnp.int32)
+
+    # In-batch dedup: lane i survives iff it is the LAST masked lane of its key.
+    last_of_key = jnp.full((ku,), -1, jnp.int32).at[
+        jnp.where(mask, kid, ku)
+    ].max(order, mode="drop")
+    rep = mask & (last_of_key[jnp.clip(kid, 0, ku - 1)] == order)
+
+    # Cross-tick coalesce: representative lanes whose key is still pending.
+    slot = q.slot_of_key[jnp.clip(kid, 0, ku - 1)]          # monotone idx or -1
+    pending = rep & (slot >= q.head) & (slot < q.tail)
+    fresh = rep & ~pending
+
+    upd_slot = jnp.where(pending, slot % cap, cap)           # OOB -> dropped
+
+    def upd(buf, vals):
+        return buf.at[upd_slot].set(vals.astype(buf.dtype), mode="drop")
+
+    keys_b = upd(q.keys, kid)
+    ts_b = upd(q.data_ts, jnp.asarray(data_ts, jnp.int32))
+    org_b = upd(q.origin, jnp.asarray(origin, jnp.int32))
+
+    # Append the fresh representatives (same overflow policy as ``enqueue``).
+    offs = jnp.cumsum(fresh.astype(jnp.int32)) - 1
+    free = cap - (q.tail - q.head)
+    accept = fresh & (offs < free)
+    n_accept = jnp.sum(accept.astype(jnp.int32))
+    slots = jnp.where(accept, (q.tail + offs) % cap, cap)
+
+    def app(buf, vals):
+        return buf.at[slots].set(vals.astype(buf.dtype), mode="drop")
+
+    slot_of_key = q.slot_of_key.at[jnp.where(accept, kid, ku)].set(
+        q.tail + offs, mode="drop"
+    )
+    n_coalesced = jnp.sum((mask & ~rep).astype(jnp.int32)) + jnp.sum(
+        pending.astype(jnp.int32)
+    )
+    return (
+        dataclasses.replace(
+            q,
+            keys=app(keys_b, kid),
+            data_ts=app(ts_b, jnp.asarray(data_ts, jnp.int32)),
+            origin=app(org_b, jnp.asarray(origin, jnp.int32)),
+            tail=q.tail + n_accept,
+            dropped=q.dropped + jnp.sum((fresh & ~accept).astype(jnp.int32)),
+            slot_of_key=slot_of_key,
+            coalesced=q.coalesced + n_coalesced,
+        ),
+        n_accept,
+    )
+
+
+def drained_entries(
+    q: WriteQueue, n_drained: jax.Array, max_per_tick: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The (key, data_ts, live-mask) of the rows drained by the LAST ``drain``.
+
+    ``q`` is the queue AFTER the drain (head already advanced); the ring
+    still physically holds the drained rows.  Static shape
+    ``(max_per_tick,)`` — the drain's own per-tick bound.  Used by the keyed
+    durability model to commit drained versions into the store's membership
+    table.
+    """
+    idx = (q.head - n_drained + jnp.arange(max_per_tick, dtype=jnp.int32)) % q.capacity
+    live = jnp.arange(max_per_tick, dtype=jnp.int32) < n_drained
+    return q.keys[idx].astype(jnp.int32), q.data_ts[idx], live

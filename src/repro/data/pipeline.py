@@ -42,9 +42,19 @@ class DataConfig:
 def synthetic_batch(
     cfg: ModelConfig, seq: int, batch: int, step: int, seed: int = 0
 ) -> dict:
-    """Deterministic synthetic batch (same on every host, no file I/O)."""
+    """Deterministic synthetic batch (same on every host, no file I/O).
+
+    Tokens follow a power-law marginal (not uniform): a uniform stream is
+    already loss-OPTIMAL for a fresh near-zero-logit model (CE == log V with
+    zero gradient signal), so nothing can be learned from it.  The skewed
+    unigram distribution gives the trainer a real signal — the loss floor is
+    the distribution's entropy, well below log V.
+    """
     rng = np.random.default_rng(np.uint32(seed * 1_000_003 + step))
-    tokens = rng.integers(0, cfg.vocab_size, (batch, seq + 1), dtype=np.int32)
+    u = rng.random((batch, seq + 1))
+    tokens = np.minimum(
+        (cfg.vocab_size * u**4).astype(np.int32), cfg.vocab_size - 1
+    )
     out = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
     if cfg.family == "vlm":
         out["patches"] = rng.standard_normal(

@@ -49,6 +49,39 @@ def test_distributed_fog_matches_headline():
 
 
 @pytest.mark.slow
+def test_distributed_fog_runs_workload_scenarios():
+    """The sharded fog consumes the same WorkloadSpec as the single-host
+    engines: a mutable zipf+churn scenario must show a LIVE coherence pass,
+    ring coalescing, cold rejoins, and write conservation."""
+    out = _run("""
+        import jax, json
+        from repro.core import SimConfig, summarize
+        from repro.core.workload import WorkloadSpec
+        from repro.core.distributed import run_distributed_sim
+        AxisType = getattr(jax.sharding, 'AxisType', None)
+        kw = dict(axis_types=(AxisType.Auto,)) if AxisType else {}
+        mesh = jax.make_mesh((8,), ('data',), **kw)
+        spec = WorkloadSpec(popularity='zipf', key_universe=1024, zipf_alpha=1.1,
+                            churn_period=100, churn_fraction=0.25)
+        cfg = SimConfig(n_nodes=48, cache_lines=200, loss_prob=0.01, workload=spec)
+        final, series = run_distributed_sim(mesh, cfg, 400, axis='data')
+        s = summarize(series)
+        s['pending'] = int(final.queue.size())
+        print(json.dumps({k: s[k] for k in
+            ('read_miss_ratio','coherence_updates','writes_coalesced',
+             'churn_rejoins','writes_gen','writes_drained','queue_dropped',
+             'pending')}))
+    """)
+    s = json.loads(out.strip().splitlines()[-1])
+    assert s["coherence_updates"] > 0           # the sweep is live, not skipped
+    assert s["writes_coalesced"] > 0            # ring coalescing engaged
+    assert s["churn_rejoins"] > 0               # nodes actually cycled
+    assert s["read_miss_ratio"] < 0.5
+    assert (s["writes_drained"] + s["pending"] + s["queue_dropped"]
+            + s["writes_coalesced"] == s["writes_gen"])
+
+
+@pytest.mark.slow
 def test_mini_dryrun_lowers_and_compiles():
     """build_cell lowers+compiles on a (2,4) mesh for a full-size config."""
     out = _run("""

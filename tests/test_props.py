@@ -193,6 +193,92 @@ def test_queue_overflow_drops_counted(cap, burst):
 
 
 # ---------------------------------------------------------------------------
+# Keyed write-behind: coalescing conservation + no durable version lost
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    data=st.data(),
+    ku=st.sampled_from([4, 8, 16]),
+    cap=st.sampled_from([8, 32]),
+)
+def test_keyed_coalescing_conservation_and_no_version_loss(data, ku, cap):
+    """(1) per-tick conservation: writes == appended + coalesced + dropped;
+    (2) drained rows never exceed enqueued rows (coalesced drain count ≤
+    enqueued writes); (3) after a full drain, the store's keyed table holds
+    EXACTLY the newest accepted version of every written key."""
+    from repro.core import backing_store as bs
+
+    q = wb.empty_queue(cap, key_universe=ku)
+    store = bs.init_store(key_universe=ku)
+    latest: dict[int, int] = {}
+    n_writes = n_drained = 0
+    n_ticks = data.draw(st.integers(1, 25))
+    for t in range(n_ticks):
+        k = data.draw(st.lists(st.integers(0, ku - 1), min_size=1, max_size=6))
+        mask = [data.draw(st.booleans()) for _ in k]
+        kid = jnp.asarray(k, jnp.int32)
+        ts = jnp.full((len(k),), t, jnp.int32)
+        before = (int(q.tail), int(q.coalesced), int(q.dropped))
+        q, acc = wb.enqueue_keyed(q, kid, ts, jnp.zeros(len(k), jnp.int32),
+                                  jnp.asarray(mask))
+        writes = sum(mask)
+        n_writes += writes
+        d_tail = int(q.tail) - before[0]
+        d_coal = int(q.coalesced) - before[1]
+        d_drop = int(q.dropped) - before[2]
+        assert writes == d_tail + d_coal + d_drop
+        assert int(acc) == d_tail
+        for ki, mi in zip(k, mask):
+            if mi and d_drop == 0:
+                latest[ki] = t
+        healthy = data.draw(st.booleans())
+        q, n, _ = wb.drain(q, t, jnp.asarray(healthy), 5.0, 10.0, max_per_tick=8)
+        n_drained += int(n)
+        kids, tss, live = wb.drained_entries(q, n, 8)
+        store = bs.commit_keyed_rows(store, kids, tss, live)
+        assert n_drained <= n_writes  # coalesced drain count ≤ enqueued
+    # drain the backlog fully, then check version-exactness
+    t = n_ticks + 64
+    while int(q.size()) > 0:
+        q, n, _ = wb.drain(q, t, jnp.asarray(True), 5.0, 10.0, max_per_tick=8)
+        kids, tss, live = wb.drained_entries(q, n, 8)
+        store = bs.commit_keyed_rows(store, kids, tss, live)
+        t += 1
+    if int(q.dropped) == 0:
+        table = np.asarray(store.table_ts)
+        for ki, ts_i in latest.items():
+            assert table[ki] == ts_i, f"key {ki}: durable {table[ki]} != newest {ts_i}"
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_churn_no_durable_row_lost(seed):
+    """Across join/leave cycles: write conservation holds (generated ==
+    drained + pending + dropped + coalesced) and every key's durable version
+    never exceeds — and after full drain equals — its newest write."""
+    from repro.core.simulator import SimConfig, run_sim
+    from repro.core.workload import WorkloadSpec
+
+    spec = WorkloadSpec(popularity="zipf", key_universe=128, zipf_alpha=1.0,
+                        churn_period=40, churn_fraction=0.3)
+    cfg = SimConfig(n_nodes=9, cache_lines=36, loss_prob=0.05, workload=spec)
+    final, series = run_sim(cfg, 200, seed=seed)
+    gen = int(np.sum(np.asarray(series.writes_gen)))
+    drained = int(np.sum(np.asarray(series.writes_drained)))
+    coalesced = int(np.sum(np.asarray(series.writes_coalesced)))
+    pending = int(final.queue.size())
+    dropped = int(final.queue.dropped)
+    assert gen == drained + pending + dropped + coalesced
+    table = np.asarray(final.store.table_ts)
+    truth = np.asarray(final.latest_ts)
+    assert np.all(table <= truth)  # durability never invents versions
+    written = truth >= 0
+    if pending == 0 and dropped == 0:
+        np.testing.assert_array_equal(table[written], truth[written])
+
+
+# ---------------------------------------------------------------------------
 # Gradient compression properties
 # ---------------------------------------------------------------------------
 

@@ -17,6 +17,7 @@ import pytest
 
 from repro.core.metrics import summarize
 from repro.core.simulator import SimConfig, run_sim
+from repro.core.workload import SCENARIOS, WorkloadSpec
 
 
 def assert_series_identical(a, b):
@@ -67,6 +68,66 @@ def test_fused_matches_reference(cfg, seed):
     assert_series_identical(ref, fused)
     # sanity: the workload actually exercised the read path
     assert summarize(fused)["reads"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Scenario sweep: the same bit-identity contract on every WorkloadSpec —
+# including mutable (zipf) scenarios where the batched coherence pass is LIVE
+# (not skipped) and durability is the keyed versioned-membership model.
+# ---------------------------------------------------------------------------
+
+SCENARIO_CASES = [
+    # mutable keys, live coherence, keyed durability (fast tier)
+    ("zipf_hot", 120, WorkloadSpec(popularity="zipf", key_universe=512, zipf_alpha=1.2)),
+    # duty-cycled write bursts
+    pytest.param(
+        ("bursty", 150, WorkloadSpec(
+            popularity="zipf", key_universe=512, zipf_alpha=0.9,
+            rate="bursty", rate_period=30, rate_duty=0.4)),
+        marks=_slow,
+    ),
+    # node churn: cold restarts + re-staggered reads
+    pytest.param(
+        ("churn", 200, WorkloadSpec(
+            popularity="zipf", key_universe=512, zipf_alpha=0.9,
+            churn_period=60, churn_fraction=0.25)),
+        marks=_slow,
+    ),
+    # everything at once
+    pytest.param(
+        ("storm", 260, SCENARIOS["storm"]), marks=_slow,
+    ),
+]
+
+
+@pytest.mark.parametrize(
+    "case", SCENARIO_CASES, ids=lambda c: c[0] if isinstance(c, tuple) else None
+)
+@pytest.mark.parametrize(
+    "seed", [0, pytest.param(7, marks=pytest.mark.slow)]
+)
+def test_scenarios_fused_matches_reference(case, seed):
+    name, ticks, spec = case
+    cfg = SimConfig(n_nodes=11, cache_lines=44, loss_prob=0.02, workload=spec)
+    _, ref = run_sim(cfg, ticks, seed=seed, engine="reference")
+    _, fused = run_sim(cfg, ticks, seed=seed, engine="fused")
+    assert_series_identical(ref, fused)
+    s = summarize(fused)
+    assert s["reads"] > 0
+    # the re-write coherence pass must actually be LIVE, not a skipped no-op
+    assert s["coherence_updates"] > 0, name
+    # re-writes of still-pending keys were coalesced into the writer's ring
+    assert s["writes_coalesced"] > 0, name
+    if spec.has_churn:
+        assert s["churn_rejoins"] > 0, name
+
+
+def test_default_scenario_skips_coherence_but_reference_proves_noop():
+    """On the write-once stream the fused engine skips the sweep; the
+    reference engine RUNS it and must count exactly zero applied updates."""
+    cfg = SimConfig(n_nodes=10, cache_lines=40, loss_prob=0.02)
+    _, ref = run_sim(cfg, 80, seed=2, engine="reference")
+    assert int(np.sum(np.asarray(ref.coherence_updates))) == 0
 
 
 @pytest.mark.parametrize(

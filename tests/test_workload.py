@@ -1,0 +1,173 @@
+"""Workload layer: spec validation, masks, zipf sampling, keyed durability,
+coalescing, and the staleness metric."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backing_store as bs
+from repro.core import workload as wl
+from repro.core import writeback as wb
+from repro.core.metrics import summarize
+from repro.core.simulator import SimConfig, run_sim
+
+
+class TestSpec:
+    def test_default_is_paper_stream(self):
+        spec = wl.WorkloadSpec()
+        assert not spec.mutable and not spec.has_churn
+
+    def test_stream_rejects_modulation_and_churn(self):
+        with pytest.raises(ValueError):
+            wl.WorkloadSpec(rate="bursty")
+        with pytest.raises(ValueError):
+            wl.WorkloadSpec(churn_period=50)
+
+    def test_scenarios_registry_well_formed(self):
+        assert "paper" in wl.SCENARIOS
+        for name, spec in wl.SCENARIOS.items():
+            assert isinstance(spec, wl.WorkloadSpec), name
+        assert wl.SCENARIOS["paper"] == wl.WorkloadSpec()
+
+    def test_spec_hashable_for_jit_staticness(self):
+        assert hash(wl.SCENARIOS["storm"]) == hash(dataclasses.replace(wl.SCENARIOS["storm"]))
+
+
+class TestMasks:
+    def test_online_rotates_and_keeps_fraction(self):
+        spec = wl.WorkloadSpec(popularity="zipf", churn_period=10, churn_fraction=0.25)
+        n = 16
+        offline_seen = set()
+        for t in (0, 10, 20, 30, 40):
+            mask = np.asarray(wl.online_mask(spec, n, jnp.int32(t)))
+            assert mask.sum() == n - 4  # round(16 * 0.25) offline
+            offline_seen |= set(np.nonzero(~mask)[0].tolist())
+        assert len(offline_seen) > 4  # the block actually rotates
+
+    def test_rejoin_is_edge_triggered(self):
+        spec = wl.WorkloadSpec(popularity="zipf", churn_period=10, churn_fraction=0.25)
+        n = 16
+        for t in range(1, 35):
+            back = np.asarray(wl.rejoin_mask(spec, n, jnp.int32(t)))
+            on_now = np.asarray(wl.online_mask(spec, n, jnp.int32(t)))
+            on_prev = np.asarray(wl.online_mask(spec, n, jnp.int32(t - 1)))
+            np.testing.assert_array_equal(back, on_now & ~on_prev)
+
+    def test_bursty_duty_cycle(self):
+        spec = wl.WorkloadSpec(popularity="zipf", rate="bursty",
+                               rate_period=10, rate_duty=0.3)
+        on = [bool(wl.rate_mask(spec, 4, jnp.int32(t))[0]) for t in range(20)]
+        assert sum(on) == 6  # 3 on-ticks per 10-tick period
+        assert on[0] and not on[5]
+
+    def test_diurnal_bounded_and_periodic(self):
+        spec = wl.WorkloadSpec(popularity="zipf", rate="diurnal",
+                               rate_period=40, rate_floor=0.25)
+        n = 20
+        counts = [int(wl.rate_mask(spec, n, jnp.int32(t)).sum()) for t in range(80)]
+        assert min(counts) >= int(0.25 * n)
+        assert max(counts) == n
+        assert counts[:40] == counts[40:]  # periodic
+
+    def test_shard_slices_match_global_masks(self):
+        """node_ids slicing (the distributed runtime) equals the global mask."""
+        spec = wl.SCENARIOS["storm"]
+        n, t = 12, jnp.int32(137)
+        ids = jnp.arange(n, dtype=jnp.int32)
+        for fn in (wl.online_mask, wl.rejoin_mask, wl.rate_mask):
+            full = np.asarray(fn(spec, n, t))
+            for lo in (0, 4, 8):
+                part = np.asarray(fn(spec, n, t, ids[lo:lo + 4]))
+                np.testing.assert_array_equal(part, full[lo:lo + 4])
+
+
+class TestZipf:
+    def test_sampling_is_skewed_and_bounded(self):
+        spec = wl.WorkloadSpec(popularity="zipf", key_universe=256, zipf_alpha=1.1)
+        ids = np.asarray(wl.sample_key_ids(spec, jax.random.PRNGKey(0), (5000,)))
+        assert ids.min() >= 0 and ids.max() < 256
+        # rank-0 should dominate any mid-rank key under alpha > 1
+        assert (ids == 0).sum() > 10 * max(1, (ids == 128).sum())
+
+    def test_higher_alpha_more_skew(self):
+        def top1(alpha):
+            spec = wl.WorkloadSpec(popularity="zipf", key_universe=128, zipf_alpha=alpha)
+            ids = np.asarray(wl.sample_key_ids(spec, jax.random.PRNGKey(1), (4000,)))
+            return (ids == 0).sum()
+        assert top1(1.3) > top1(0.5)
+
+    def test_versioned_payload_distinguishes_versions(self):
+        k = jnp.uint32(1234)
+        a = wl.versioned_payload(k, jnp.int32(5), 8)
+        b = wl.versioned_payload(k, jnp.int32(6), 8)
+        assert not np.allclose(np.asarray(a), np.asarray(b))
+        # deterministic in (key, ts)
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(wl.versioned_payload(k, jnp.int32(5), 8))
+        )
+
+
+class TestKeyedDurability:
+    def test_coalesce_pending_rewrite_single_slot(self):
+        q = wb.empty_queue(16, key_universe=8)
+        one = jnp.ones((1,), bool)
+        q, acc = wb.enqueue_keyed(q, jnp.asarray([3]), jnp.asarray([0]), jnp.asarray([0]), one)
+        assert int(acc) == 1 and int(q.size()) == 1
+        # re-write of the pending key: coalesced in place, ring doesn't grow
+        q, acc = wb.enqueue_keyed(q, jnp.asarray([3]), jnp.asarray([9]), jnp.asarray([1]), one)
+        assert int(acc) == 0 and int(q.size()) == 1 and int(q.coalesced) == 1
+        assert int(q.data_ts[int(q.slot_of_key[3]) % q.capacity]) == 9
+
+    def test_in_batch_duplicates_last_writer_wins(self):
+        q = wb.empty_queue(16, key_universe=8)
+        kids = jnp.asarray([5, 5, 5])
+        ts = jnp.asarray([1, 2, 3])
+        q, acc = wb.enqueue_keyed(q, kids, ts, jnp.zeros(3, jnp.int32), jnp.ones(3, bool))
+        assert int(acc) == 1 and int(q.coalesced) == 2
+        assert int(q.data_ts[int(q.slot_of_key[5]) % q.capacity]) == 3
+
+    def test_drained_versions_commit_to_table(self):
+        q = wb.empty_queue(16, key_universe=8)
+        store = bs.init_store(key_universe=8)
+        q, _ = wb.enqueue_keyed(q, jnp.asarray([2, 6]), jnp.asarray([4, 7]),
+                                jnp.zeros(2, jnp.int32), jnp.ones(2, bool))
+        q, n, _ = wb.drain(q, 0, jnp.asarray(True), 5.0, 10.0, max_per_tick=8)
+        assert int(n) == 2
+        kids, ts, live = wb.drained_entries(q, n, 8)
+        store = bs.commit_keyed_rows(store, kids, ts, live)
+        assert int(store.table_ts[2]) == 4 and int(store.table_ts[6]) == 7
+        assert int(store.table_ts[0]) == -1  # never written
+
+    @pytest.mark.slow
+    def test_read_your_drained_writes_via_sim(self):
+        """Keyed end-to-end: with a hot universe every key ends durable with
+        its newest accepted version after the queue fully drains."""
+        spec = wl.WorkloadSpec(popularity="zipf", key_universe=64, zipf_alpha=1.0)
+        cfg = SimConfig(n_nodes=8, cache_lines=32, loss_prob=0.0, workload=spec)
+        final, series = run_sim(cfg, 300, seed=3)
+        assert int(final.queue.size()) == 0  # writer kept up
+        table = np.asarray(final.store.table_ts)
+        truth = np.asarray(final.latest_ts)
+        written = truth >= 0
+        assert written.any()
+        np.testing.assert_array_equal(table[written], truth[written])
+
+
+class TestStaleness:
+    def test_stream_never_stale(self):
+        cfg = SimConfig(n_nodes=10, cache_lines=64, loss_prob=0.02)
+        s = summarize(run_sim(cfg, 150, seed=0)[1])
+        assert s["stale_reads"] == 0 and s["stale_read_ratio"] == 0.0
+
+    @pytest.mark.slow
+    def test_lossy_mutable_workload_reports_staleness(self):
+        """Heavy loss on a hot mutable universe must surface stale serves
+        (a resident copy missed the coherence update)."""
+        spec = wl.WorkloadSpec(popularity="zipf", key_universe=128, zipf_alpha=1.2)
+        cfg = SimConfig(n_nodes=12, cache_lines=48, loss_prob=0.3,
+                        read_period=4, workload=spec)
+        s = summarize(run_sim(cfg, 300, seed=1)[1])
+        assert s["stale_reads"] > 0
+        assert 0.0 < s["stale_read_ratio"] <= 1.0
