@@ -1,0 +1,115 @@
+"""Distributed fog throughput sweep: ticks/s at 1 / 2 / 4 / 8 shards.
+
+Measures steady-state ticks/sec of ``run_distributed_sim`` on submeshes of
+1/2/4/8 host devices at the paper geometry (N=48 so every shard count
+divides evenly), emits ``BENCH_distributed.json`` plus harness CSV lines,
+and reports the fused single-host engine on the same config as the scaling
+baseline.
+
+The forced-device flag must be set BEFORE jax imports, so the harness
+(``benchmarks.run``) invokes this module through ``run_in_subprocess``; the
+child re-executes ``python -m benchmarks.distributed_bench`` with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.distributed_bench [--quick]``
+(needs the XLA_FLAGS above to sweep past 1 device).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+SHARD_COUNTS = (1, 2, 4, 8)
+TICKS = 400
+N_NODES = 48
+
+
+def bench_distributed(ticks: int = TICKS, n_nodes: int = N_NODES,
+                      shard_counts=SHARD_COUNTS,
+                      out_path: str = "BENCH_distributed.json") -> dict:
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from benchmarks.common import emit
+    from repro.core.distributed import run_distributed_sim
+    from repro.core.simulator import SimConfig, run_sim
+
+    cfg = SimConfig(n_nodes=n_nodes, cache_lines=200, loss_prob=0.01)
+    results = {"ticks": ticks, "n_nodes": n_nodes, "shards": []}
+
+    # Single-host fused engine: the scaling baseline on the same config.
+    _, series = run_sim(cfg, ticks, seed=0)
+    jax.block_until_ready(series.reads)
+    t0 = time.perf_counter()
+    _, series = run_sim(cfg, ticks, seed=1)
+    jax.block_until_ready(series.reads)
+    secs = time.perf_counter() - t0
+    results["fused_ticks_per_s"] = ticks / secs
+    emit(f"distributed.fused_baseline.n{n_nodes}", 1e6 * secs / ticks,
+         f"ticks_per_s={ticks / secs:.1f}")
+
+    avail = len(jax.devices())
+    for ndev in shard_counts:
+        if ndev > avail or n_nodes % ndev:
+            emit(f"distributed.n{n_nodes}.d{ndev}", 0.0,
+                 f"skipped (have {avail} devices)")
+            continue
+        mesh = Mesh(np.asarray(jax.devices()[:ndev]), ("data",))
+        _, series = run_distributed_sim(mesh, cfg, ticks, seed=0)
+        jax.block_until_ready(series.reads)
+        t0 = time.perf_counter()
+        _, series = run_distributed_sim(mesh, cfg, ticks, seed=1)
+        jax.block_until_ready(series.reads)
+        secs = time.perf_counter() - t0
+        rate = ticks / secs
+        results["shards"].append({"n_devices": ndev, "ticks_per_s": rate})
+        emit(f"distributed.n{n_nodes}.d{ndev}", 1e6 * secs / ticks,
+             f"ticks_per_s={rate:.1f}")
+
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+def run_in_subprocess(ticks: int = TICKS, timeout: int = 1200) -> None:
+    """Re-exec the sweep with 8 forced host devices; relay its CSV lines.
+
+    Used by ``benchmarks.run`` — the parent process must keep its own
+    single-device XLA view, and the flag only takes effect before jax
+    initializes.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    try:
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.distributed_bench",
+             "--ticks", str(ticks)],
+            capture_output=True, text=True, env=env, timeout=timeout,
+        )
+    except subprocess.TimeoutExpired:
+        print(f"distributed.sweep_failed,0.0,timeout after {timeout}s")
+        return
+    for line in out.stdout.splitlines():
+        if line and not line.startswith("name,"):
+            print(line)
+    if out.returncode != 0:
+        print(f"distributed.sweep_failed,0.0,{out.stderr.strip()[-200:]!r}")
+
+
+def main() -> None:
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--ticks", type=int, default=TICKS)
+    p.add_argument("--quick", action="store_true")
+    a = p.parse_args()
+    bench_distributed(ticks=150 if a.quick else a.ticks)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

@@ -40,6 +40,11 @@ def main() -> None:
         scenarios=("paper", "zipf", "churn") if quick else None,
     )
 
+    # Distributed 1/2/4/8-shard sweep -> BENCH_distributed.json (subprocess:
+    # the forced-device flag must precede jax initialization).
+    from benchmarks.distributed_bench import run_in_subprocess
+    run_in_subprocess(ticks=int(400 * scale))
+
     from benchmarks.roofline import emit_table
     rows = emit_table()
     if not rows:

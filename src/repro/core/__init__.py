@@ -33,8 +33,15 @@ from repro.core.coherence import (
     merge_broadcasts,
 )
 from repro.core.flic import invalidate_nodes, update_rows
-from repro.core.metrics import TickMetrics, summarize
-from repro.core.simulator import SimConfig, SimState, init_sim, run_sim, sim_tick
+from repro.core.metrics import TickMetrics, diff_summaries, summarize
+from repro.core.simulator import (
+    SimConfig,
+    SimState,
+    init_sim,
+    run_any_engine,
+    run_sim,
+    sim_tick,
+)
 from repro.core.workload import SCENARIOS, WorkloadSpec
 
 __all__ = [
@@ -58,10 +65,12 @@ __all__ = [
     "markov_loss_bound",
     "merge_broadcasts",
     "TickMetrics",
+    "diff_summaries",
     "summarize",
     "SimConfig",
     "SimState",
     "init_sim",
+    "run_any_engine",
     "run_sim",
     "sim_tick",
 ]

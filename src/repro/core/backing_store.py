@@ -98,6 +98,29 @@ def inject_outage(store: StoreState, now: jax.Array, duration: jax.Array) -> Sto
     )
 
 
+def apply_outage_schedule(
+    store: StoreState, now: jax.Array, schedule: tuple[tuple[int, int], ...]
+) -> StoreState:
+    """Deterministic outage windows from a static ``(start, duration)`` tuple.
+
+    When ``now == start`` the store goes down until ``start + duration``
+    (extending any outage already in effect, never shortening it).  The
+    schedule is static configuration (``SimConfig.outage_schedule``), so the
+    same failure trace drives all three engines inside ``lax.scan`` — this is
+    how the conformance matrix exercises the §VI fault-tolerance paths
+    without host-side state surgery.
+    """
+    now = jnp.asarray(now, jnp.int32)
+    until = store.outage_until
+    for start, duration in schedule:
+        until = jnp.where(
+            now == jnp.int32(start),
+            jnp.maximum(until, jnp.int32(start + duration)),
+            until,
+        )
+    return dataclasses.replace(store, outage_until=until)
+
+
 def commit_writes(
     store: StoreState,
     n_rows: jax.Array,

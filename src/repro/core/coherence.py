@@ -73,6 +73,7 @@ def merge_broadcasts(
     delivered: jax.Array,
     now: jax.Array,
     self_always: bool = True,
+    node_ids: jax.Array | None = None,
 ) -> tuple[CacheState, CacheLine]:
     """Apply one gossip round: every node merges the R broadcast rows.
 
@@ -81,6 +82,8 @@ def merge_broadcasts(
       rows: CacheLine with leading axis R (one row per broadcasting node).
       delivered: (N, R) bool — delivery mask per (receiver, sender).
       self_always: a node always "hears" its own broadcast (loopback).
+      node_ids: (N,) global node id of each cache lane (the distributed
+        runtime passes its shard's ids; default ``arange(N)``).
 
     Returns (caches, evictions) where evictions has leading axes (N, R).
     Receivers store broadcast lines as CLEAN (dirty=False): only the origin
@@ -88,9 +91,13 @@ def merge_broadcasts(
     """
     n = caches.tags.shape[0]
     r = rows.key.shape[0]
+    if node_ids is None:
+        node_ids = jnp.arange(n, dtype=jnp.int32)
+    else:
+        node_ids = jnp.asarray(node_ids, jnp.int32)
     if self_always:
         origins = jnp.asarray(rows.origin, jnp.int32)  # (R,)
-        self_mask = origins[None, :] == jnp.arange(n, dtype=jnp.int32)[:, None]
+        self_mask = origins[None, :] == node_ids[:, None]
         delivered = delivered | self_mask
 
     def per_node(cache, deliv_row, node_idx):
@@ -106,9 +113,7 @@ def merge_broadcasts(
         )
         return insert_batch(cache, lines, now)
 
-    caches, evictions = jax.vmap(per_node)(
-        caches, delivered, jnp.arange(n, dtype=jnp.int32)
-    )
+    caches, evictions = jax.vmap(per_node)(caches, delivered, node_ids)
     del r
     return caches, evictions
 

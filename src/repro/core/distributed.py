@@ -1,22 +1,44 @@
-"""Pod-scale FLIC: the fog cache under ``shard_map``.
+"""Pod-scale FLIC: the fog cache under ``shard_map`` — full §VI parity.
 
 This is the production embodiment of the paper's protocol on a TPU mesh
-(DESIGN.md §2): fog *nodes* are sharded across a mesh axis (the "fog" axis —
-at pod scale that is the ``data`` axis); the UDP broadcast becomes an
-``all_gather`` of the tick's update rows along that axis; soft coherence and
-the loss model are unchanged (loss masks are per-receiver PRNG draws, used
-both for reproduction fidelity and for *deliberate* gossip subsampling as a
-bandwidth knob).
+(DESIGN.md §2, §8): fog *nodes* are sharded across a mesh axis (the "fog"
+axis — at pod scale that is the ``data`` axis); the UDP broadcast becomes
+collective communication along that axis; soft coherence and the loss model
+are unchanged.
 
-Global singletons (write-behind queue, backing store) are computed
-*replicated*: every device runs the identical deterministic update, a
-standard SPMD idiom that needs no extra communication.
+Conformance strategy (DESIGN.md §8): the distributed tick is a *sharded
+evaluation of the reference tick*, not a reinterpretation of it.  Global
+singletons — the PRNG stream (the exact ``jax.random.split(rng, 6)``
+schedule of ``sim_tick``), the workload draws, the writer's ring, the
+backing store, and every metric — are computed REPLICATED: each device runs
+the identical deterministic update, the standard SPMD idiom that needs no
+extra communication.  Only the per-node cache array is sharded; each device
+slices its nodes' lanes out of the replicated global draws.  The payoff is
+the repo's central correctness asset: ``tests/conformance.py`` asserts the
+``TickMetrics`` series is BIT-IDENTICAL across reference / fused /
+distributed for every scenario × seed × outage schedule.
+
+Communication per tick (what the dry-run lowers):
+  * 1× all_gather of per-node fog-miss flags     — the read-request broadcast;
+  * 1× pmax of per-query max data timestamps     — the soft-coherence merge;
+  * 1× pmax of responder ids at the winning ts   — unique-winner election;
+  * 1× psum of the winners' payload rows         — the response payload;
+  * scalar psums for the sharded metric terms.
+
+The §VI fault-tolerance paths run in full here, through the SAME shared
+helpers as the single-host engines: writer-ring forwarding of pending rows
+(``_resolve_backstop`` / ``_resolve_backstop_keyed`` on the replicated
+ring), health-gated synchronous store reads, keyed versioned commits
+(``backing_store.commit_keyed_rows``), load-store-buffer coalescing
+(``writeback.enqueue_keyed``) and deterministic churn rejoins with
+cold-started shard caches.
 
 The fog read resolves soft coherence across devices with a max-timestamp
-reduction; ties are impossible because the tie-break key appends the global
-node id (each key is held with a unique (ts, node) at any device... multiple
-devices may cache copies, so the tie-break appends the *responder id*, making
-the argmax unique and the payload psum exact).
+reduction; the winner is made unique by a second reduction over responder
+ids at the winning timestamp, so the payload psum is exact.  The tie-break
+direction is unobservable: payloads are pure functions of (key, data_ts)
+(``workload.versioned_payload``), so any responder at the winning timestamp
+scatters identical bytes.
 """
 from __future__ import annotations
 
@@ -31,11 +53,23 @@ from repro.core import backing_store as bs
 from repro.core import workload as wl
 from repro.core import writeback as wb
 from repro.core.cache_state import CacheLine, CacheState, empty_cache
-from repro.core.coherence import bernoulli_loss_mask
+from repro.core.coherence import GilbertElliott
+from repro.core.flic import insert as _insert
 from repro.core.flic import invalidate_nodes, update_rows
 from repro.core.metrics import TickMetrics
-from repro.core.simulator import SimConfig, _insert_own_rows, _payload_for
-from repro.utils.hashing import hash2_u32
+from repro.core.simulator import (
+    SimConfig,
+    _delivery_mask,
+    _gen_rows,
+    _gen_writes_keyed,
+    _insert_own_rows,
+    _merge_replicate,
+    _payload_for,
+    _read_draws,
+    _read_draws_keyed,
+    _resolve_backstop,
+    _resolve_backstop_keyed,
+)
 
 
 @jax.tree_util.register_dataclass
@@ -46,8 +80,10 @@ class FogShardState:
     caches: CacheState       # (n_local, S, W, ...) — this device's nodes
     queue: wb.WriteQueue     # replicated
     store: bs.StoreState     # replicated
+    channel: GilbertElliott  # replicated (GE loss-model receiver states)
     tick: jax.Array          # replicated int32
-    rng: jax.Array           # replicated key (devices derive per-shard keys)
+    rng: jax.Array           # replicated key — the SAME per-tick split
+    #                          schedule as the single-host engines
     latest_ts: jax.Array     # replicated (K,) int32 — newest write per key id
     #                          (mutable workloads; staleness ground truth)
 
@@ -61,15 +97,11 @@ def init_fog_shard(cfg: SimConfig, n_local: int, seed: int = 0) -> FogShardState
         ),
         queue=wb.empty_queue(cfg.queue_capacity, key_universe=ku),
         store=bs.init_store(key_universe=ku),
+        channel=GilbertElliott.init(cfg.n_nodes),
         tick=jnp.int32(0),
         rng=jax.random.PRNGKey(seed),
         latest_ts=jnp.full((ku,), -1, jnp.int32),
     )
-
-
-def _shard_rng(rng: jax.Array, tick: jax.Array, rank: jax.Array, salt: int) -> jax.Array:
-    """Deterministic per-(device, tick, purpose) key from the replicated key."""
-    return jax.random.fold_in(jax.random.fold_in(jax.random.fold_in(rng, salt), tick), rank)
 
 
 def fog_shard_tick(
@@ -77,112 +109,94 @@ def fog_shard_tick(
 ) -> tuple[FogShardState, TickMetrics]:
     """One tick of the distributed fog. Must run inside shard_map over ``axis``.
 
-    Communication pattern per tick (this is what the dry-run lowers):
-      * 1× all_gather of (n_local, row) fresh rows      — the broadcast;
-      * 1× all_gather of (n_local, key) read queries    — the fog read;
-      * 1× psum of per-query response records           — soft-coherence merge;
-      * scalar psums for metrics.
+    Emits the bit-identical ``TickMetrics`` of ``sim_tick`` /
+    ``sim_tick_ref`` (see module docstring): replicated global computation
+    for the singletons, per-shard slices for the cache work, collective
+    reductions only where results are genuinely sharded.
     """
-    # Static axis size from the shard shape (jax.lax.axis_size is not
-    # available on every supported JAX version, and shapes need it static).
     n_local = state.caches.tags.shape[0]
-    ndev = cfg.n_nodes // n_local
+    n = cfg.n_nodes
     rank = jax.lax.axis_index(axis)
-    n_total = ndev * n_local
     spec = cfg.workload
     t = state.tick
     node_ids = rank * n_local + jnp.arange(n_local, dtype=jnp.int32)
+    all_ids = jnp.arange(n, dtype=jnp.int32)
+    rng, k_loss, k_age, k_src, k_qloss, k_coll = jax.random.split(state.rng, 6)
+    m = TickMetrics.zeros()
+    caches = state.caches
+    latest_ts = state.latest_ts
+    store_in = state.store
+    if cfg.outage_schedule:
+        store_in = bs.apply_outage_schedule(store_in, t, cfg.outage_schedule)
 
-    k_loss = _shard_rng(state.rng, t, rank, 1)
-    k_age = _shard_rng(state.rng, t, rank, 2)
-    k_src = _shard_rng(state.rng, t, rank, 3)
-    k_qloss = _shard_rng(state.rng, t, rank, 4)
-    k_wr = _shard_rng(state.rng, t, rank, 5)
+    def my(xs):
+        """This rank's node slice of a replicated leading-(n,) array."""
+        return jax.lax.dynamic_slice_in_dim(xs, rank * n_local, n_local, 0)
 
     # ---- 0. churn: rejoining shard nodes cold-start ------------------------
-    caches = state.caches
     if spec.has_churn:
-        online_l = wl.online_mask(spec, n_total, t, node_ids)
-        rejoin_l = wl.rejoin_mask(spec, n_total, t, node_ids)
-        caches = invalidate_nodes(caches, rejoin_l)
-        n_rejoin = jax.lax.psum(jnp.sum(rejoin_l.astype(jnp.int32)), axis)
+        online = wl.online_mask(spec, n, t)
+        rejoin = wl.rejoin_mask(spec, n, t)
+        caches = invalidate_nodes(caches, my(rejoin))
+        n_rejoin = jnp.sum(rejoin.astype(jnp.int32))
+        online_l = my(online)
     else:
+        online = jnp.ones((n,), bool)
         online_l = jnp.ones((n_local,), bool)
         n_rejoin = jnp.int32(0)
 
-    # ---- 1. generate + broadcast (all_gather) ------------------------------
-    ts_l = jnp.full((n_local,), t, jnp.int32)
+    # ---- 1. generate one fresh row per active node (replicated draws) ------
     if spec.mutable:
-        kids_local = wl.sample_key_ids(spec, k_wr, (n_local,))
-        keys_local = wl.key_hash(kids_local)
-        write_mask_l = wl.rate_mask(spec, n_total, t, node_ids) & online_l
-        payload_l = wl.versioned_payload(keys_local, ts_l, cfg.payload_dim)
+        rows, w_kids, write_mask = _gen_writes_keyed(cfg, t, all_ids, k_loss, online)
+        n_writes = jnp.sum(write_mask.astype(jnp.int32))
     else:
-        kids_local = jnp.zeros((n_local,), jnp.int32)
-        keys_local = hash2_u32(jnp.full((n_local,), t, jnp.uint32), node_ids.astype(jnp.uint32))
-        write_mask_l = jnp.ones((n_local,), bool)
-        payload_l = _payload_for(keys_local, cfg.payload_dim)
-    rows_local = CacheLine(
-        key=keys_local,
-        data_ts=ts_l,
-        origin=node_ids,
-        data=payload_l,
-        valid=write_mask_l,
-        dirty=jnp.zeros((n_local,), bool),
-    )
-    rows_all: CacheLine = jax.tree.map(
-        lambda x: jax.lax.all_gather(x, axis, tiled=True), rows_local
-    )
-    delivered = bernoulli_loss_mask(k_loss, (n_local, n_total), cfg.loss_prob) \
-        if cfg.loss_model != "none" else jnp.ones((n_local, n_total), bool)
+        rows = _gen_rows(cfg, t, all_ids)
+        n_writes = jnp.int32(n)
+    m = dataclasses.replace(m, writes_gen=n_writes)
+
+    # ---- 2. fog broadcast under the loss model; sharded cache merge --------
+    channel, delivered = _delivery_mask(cfg, state.channel, k_loss, (n, n))
     if spec.has_churn:
-        delivered = delivered & online_l[:, None]   # offline nodes hear nothing
+        delivered = delivered & online[:, None]   # offline nodes hear nothing
+    rows_local: CacheLine = jax.tree.map(my, rows)
+    if cfg.insert_policy == "directory":
+        caches = _insert_own_rows(caches, rows_local, t)
+        if spec.mutable:
+            # LIVE coherence sweep: all n broadcast rows against this shard's
+            # caches, delivery mask sliced to the local receivers.
+            caches, n_coh_l = update_rows(
+                caches, rows, my(delivered), t, node_ids=node_ids
+            )
+            n_coh = jax.lax.psum(n_coh_l, axis)
+        else:
+            n_coh = jnp.int32(0)   # write-once: provable no-op, skipped
+    else:
+        caches = _merge_replicate(caches, rows, my(delivered), t, node_ids=node_ids)
+        n_coh = jnp.int32(0)
+    lan = n_writes.astype(jnp.float32) * cfg.row_bytes
 
-    caches = _insert_own_rows(caches, rows_local, t)
-    # Coherence sweep over the gathered rows (live on mutable workloads;
-    # a counted no-op on the write-once stream).
-    caches, n_coh_l = update_rows(caches, rows_all, delivered, t, node_ids=node_ids)
-    n_coh = jax.lax.psum(n_coh_l, axis)
-    n_writes = jnp.sum(
-        jax.lax.all_gather(write_mask_l, axis, tiled=True).astype(jnp.int32)
-    )
-    gossip_bytes = n_writes.astype(jnp.float32) * cfg.row_bytes
-
-    # ---- 2. replicated write-behind enqueue --------------------------------
-    latest_ts = state.latest_ts
+    # ---- 3. write-behind enqueue (replicated single writer) ----------------
     if spec.mutable:
-        kids_all = jax.lax.all_gather(kids_local, axis, tiled=True)
-        queue, _ = wb.enqueue_keyed(
-            state.queue, kids_all, rows_all.data_ts, rows_all.origin,
-            jnp.asarray(rows_all.valid),
+        queue, _acc = wb.enqueue_keyed(
+            state.queue, w_kids, rows.data_ts, rows.origin, write_mask
         )
         latest_ts = latest_ts.at[
-            jnp.where(jnp.asarray(rows_all.valid), kids_all, spec.key_universe)
-        ].max(rows_all.data_ts, mode="drop")
+            jnp.where(write_mask, w_kids, spec.key_universe)
+        ].max(rows.data_ts, mode="drop")
     else:
-        queue, _ = wb.enqueue(
-            state.queue, rows_all.key, rows_all.data_ts, rows_all.origin,
-            jnp.ones((n_total,), bool),
+        queue, _acc = wb.enqueue(
+            state.queue, rows.key, rows.data_ts, rows.origin, jnp.ones((n,), bool)
         )
 
-    # ---- 3. reads -----------------------------------------------------------
-    reading = ((t + node_ids) % cfg.read_period == 0) & (t > 0) & online_l
+    # ---- 4. reads: replicated draws, sharded probes ------------------------
     if spec.mutable:
-        kids_r = wl.sample_key_ids(spec, k_age, (n_local,))
-        r_keys = wl.key_hash(kids_r)
-        src = jnp.full((n_local,), -1, jnp.int32)
-        r_tick = jnp.full((n_local,), -1, jnp.int32)
+        reading, r_kids, r_keys = _read_draws_keyed(cfg, t, k_age, all_ids, online)
     else:
-        kids_r = jnp.zeros((n_local,), jnp.int32)
-        window_ticks = max(1, round(cfg.read_window_keys / n_total))
-        window = jnp.minimum(jnp.int32(window_ticks), jnp.maximum(t, 1))
-        ages = jnp.minimum(jax.random.randint(k_age, (n_local,), 0, window), t)
-        src = jax.random.randint(k_src, (n_local,), 0, n_total, dtype=jnp.int32)
-        r_tick = t - ages
-        r_keys = hash2_u32(r_tick.astype(jnp.uint32), src.astype(jnp.uint32))
+        reading, src, r_tick, r_keys = _read_draws(cfg, t, k_age, k_src, all_ids)
 
-    # local probe
-    sidx_l = (r_keys % jnp.uint32(cfg.cache_sets)).astype(jnp.int32)
+    # 4a. local probe of this shard's readers (reference-engine semantics).
+    r_keys_l = my(r_keys)
+    sidx_l = (r_keys_l % jnp.uint32(cfg.cache_sets)).astype(jnp.int32)
 
     def self_probe(cache: CacheState, key, sidx, is_reading):
         match = cache.valid[sidx] & (cache.tags[sidx] == key)
@@ -195,44 +209,48 @@ def fog_shard_tick(
         )
         return cache, hit, ts
 
-    caches, hit_local, ts_local = jax.vmap(self_probe)(caches, r_keys, sidx_l, reading)
-    need_fog = reading & ~hit_local
+    caches, hit_local_l, ts_local_l = jax.vmap(self_probe)(
+        caches, r_keys_l, sidx_l, my(reading)
+    )
+    need_fog_l = my(reading) & ~hit_local_l
+    # The fog read-request broadcast: which of the n global queries are live.
+    q_need = jax.lax.all_gather(need_fog_l, axis, tiled=True)          # (n,)
 
-    # fog query: gather all queries, probe local shard, reduce by max-ts.
-    q_keys = jax.lax.all_gather(r_keys, axis, tiled=True)          # (Nq,)
-    q_need = jax.lax.all_gather(need_fog, axis, tiled=True)        # (Nq,)
-    nq = n_total
-    sidx_q = (q_keys % jnp.uint32(cfg.cache_sets)).astype(jnp.int32)
+    # 4b. fog probe: all n queries against this shard's caches.
+    sidx_q = (r_keys % jnp.uint32(cfg.cache_sets)).astype(jnp.int32)
 
     def probe_cache(cache: CacheState):
-        tags_q = cache.tags[sidx_q]                                # (Nq, W)
-        match = cache.valid[sidx_q] & (tags_q == q_keys[:, None])
+        tags_q = cache.tags[sidx_q]                                    # (n, W)
+        match = cache.valid[sidx_q] & (tags_q == r_keys[:, None])
         hit = jnp.any(match, axis=1)
         way = jnp.argmax(match, axis=1)
         ts = jnp.where(hit, cache.data_ts[sidx_q, way], -1)
         return hit, way, ts, cache.data[sidx_q, way]
 
-    hits_qc, way_qc, ts_qc, data_qc = jax.vmap(probe_cache)(caches)  # (nl, Nq, ...)
+    hits_qc, way_qc, ts_qc, data_qc = jax.vmap(probe_cache)(caches)  # (nl, n, ..)
     if cfg.loss_model != "none":
-        resp_mask = bernoulli_loss_mask(k_qloss, (n_local, nq), cfg.loss_prob)
-        hits_qc = hits_qc & resp_mask
+        # Replicated (reader, responder) response-loss draw — the single-host
+        # engines' exact PRNG consumption — sliced to the local responders.
+        _, resp_mask = _delivery_mask(cfg, channel, k_qloss, (n, n))
+        hits_qc = hits_qc & my(jnp.transpose(resp_mask))              # (nl, n)
     if spec.has_churn:
         hits_qc = hits_qc & online_l[:, None]   # offline responders are silent
     hits_qc = hits_qc & q_need[None, :]
 
-    # Soft-coherence resolve: max data_ts wins; ties broken by responder id
-    # (two pmax rounds — avoids int32 overflow of a fused score).
-    ts_masked = jnp.where(hits_qc, ts_qc, -1)                      # (nl, Nq)
-    win_ts = jax.lax.pmax(jnp.max(ts_masked, axis=0), axis)        # (Nq,)
+    # Soft-coherence resolve: max data_ts wins; the winner is made unique by
+    # a responder-id reduction at the winning ts (payloads are pure in
+    # (key, ts), so the direction of this tie-break is unobservable).
+    ts_masked = jnp.where(hits_qc, ts_qc, -1)                          # (nl, n)
+    win_ts = jax.lax.pmax(jnp.max(ts_masked, axis=0), axis)            # (n,)
     fog_hit_q = win_ts >= 0
     at_max = hits_qc & (ts_qc == win_ts[None, :])
     nid = jnp.where(at_max, node_ids[:, None], -1)
-    win_node = jax.lax.pmax(jnp.max(nid, axis=0), axis)            # (Nq,)
+    win_node = jax.lax.pmax(jnp.max(nid, axis=0), axis)                # (n,)
     is_winner = at_max & (node_ids[:, None] == win_node[None, :])  # ≤1 True globally
     win_data = jnp.einsum("cq,cqd->qd", is_winner.astype(data_qc.dtype), data_qc)
-    win_data = jax.lax.psum(win_data, axis)                        # (Nq, D)
+    win_data = jax.lax.psum(win_data, axis)                            # (n, D)
 
-    # responder LRU refresh
+    # Responder LRU refresh on this shard.
     def touch(cache: CacheState, hits_c, ways_c):
         s = jnp.where(hits_c, sidx_q, cache.num_sets)
         return dataclasses.replace(
@@ -244,60 +262,66 @@ def fog_shard_tick(
 
     caches = jax.vmap(touch)(caches, hits_qc, way_qc)
 
-    # ---- 4. store reads for global misses (replicated computation) ---------
-    # (No writer-ring forwarding here — the distributed runtime keeps the
-    # simpler direct-membership read; the single-host engines own the full
-    # §VI forwarding semantics.)
-    store_read = q_need & ~fog_hit_q
+    n_fog_queries = jnp.sum(q_need.astype(jnp.int32))
+    n_responses = jax.lax.psum(jnp.sum(hits_qc.astype(jnp.int32)), axis)
+
+    # 4c. §VI fault tolerance — writer-ring forwarding then the store, via
+    # the SAME shared helpers as the single-host engines (the ring and store
+    # are replicated, so every device resolves the full global query set).
+    healthy = bs.store_healthy(store_in, t)
+    need_store = q_need & ~fog_hit_q
     if spec.mutable:
-        q_kids = jax.lax.all_gather(kids_r, axis, tiled=True)
-        durable_ts = state.store.table_ts[
-            jnp.clip(q_kids, 0, spec.key_universe - 1)
-        ]
-        in_store = durable_ts >= 0
+        queue_hit, store_read, failed, found, served_ts = _resolve_backstop_keyed(
+            queue, store_in, healthy, need_store, r_kids
+        )
     else:
-        q_src = jax.lax.all_gather(src, axis, tiled=True)
-        q_rtick = jax.lax.all_gather(r_tick, axis, tiled=True)
-        in_store = (q_rtick * n_total + q_src) < state.store.drained_total
-    found_q = store_read & in_store
+        enq_idx = r_tick * n + src  # FIFO enqueue order = (tick, node)
+        queue_hit, store_read, failed, found, _ = _resolve_backstop(
+            queue, store_in, healthy, need_store, enq_idx
+        )
     n_store_reads = jnp.sum(store_read.astype(jnp.int32))
-    txn = cfg.store.read_txn_bytes(state.store.drained_total)
+    n_queue_hits = jnp.sum(queue_hit.astype(jnp.int32))
+    n_failed = jnp.sum(failed.astype(jnp.int32))
+    lan = (
+        lan + n_fog_queries * cfg.query_bytes
+        + (n_responses + n_queue_hits) * cfg.row_bytes
+    )
+    txn = cfg.store.read_txn_bytes(store_in.drained_total)
+    wan_rx = n_store_reads.astype(jnp.float32) * txn
     store = dataclasses.replace(
-        state.store, api_calls=state.store.api_calls + n_store_reads
+        store_in, api_calls=store_in.api_calls + n_store_reads
     )
 
-    # ---- 5. fill readers' local caches --------------------------------------
-    def my(xs):
-        """This rank's slice of an all-gathered (n_total, ...) array."""
-        return jax.lax.dynamic_slice_in_dim(xs, rank * n_local, n_local, 0)
-
-    fill_ok = my(fog_hit_q | found_q)
+    # 4d. fill this shard's readers from fog/queue/store responses.
+    fog_hit_l = my(fog_hit_q)
+    win_ts_l = my(win_ts)
+    win_data_l = my(win_data)
+    fill_ok_l = fog_hit_l | my(queue_hit) | my(found)
     if spec.mutable:
-        miss_ts = jnp.where(my(found_q), my(durable_ts), -1)
+        served_ts_l = my(served_ts)
         fill_lines = CacheLine(
-            key=r_keys,
-            data_ts=jnp.where(my(fog_hit_q), my(win_ts), miss_ts),
+            key=r_keys_l,
+            data_ts=jnp.where(fog_hit_l, win_ts_l, served_ts_l),
             origin=jnp.full((n_local,), -1, jnp.int32),
             data=jnp.where(
-                my(fog_hit_q)[:, None], my(win_data),
-                wl.versioned_payload(r_keys, miss_ts, cfg.payload_dim),
+                fog_hit_l[:, None], win_data_l,
+                wl.versioned_payload(r_keys_l, served_ts_l, cfg.payload_dim),
             ),
-            valid=fill_ok,
+            valid=fill_ok_l,
             dirty=jnp.zeros((n_local,), bool),
         )
     else:
         fill_lines = CacheLine(
-            key=r_keys,
-            data_ts=jnp.where(my(fog_hit_q), my(win_ts), r_tick),
-            origin=src,
+            key=r_keys_l,
+            data_ts=jnp.where(fog_hit_l, win_ts_l, my(r_tick)),
+            origin=my(src),
             data=jnp.where(
-                my(fog_hit_q)[:, None], my(win_data),
-                _payload_for(r_keys, cfg.payload_dim),
+                fog_hit_l[:, None], win_data_l,
+                _payload_for(r_keys_l, cfg.payload_dim),
             ),
-            valid=fill_ok,
+            valid=fill_ok_l,
             dirty=jnp.zeros((n_local,), bool),
         )
-    from repro.core.flic import insert as _insert
 
     def fill(cache, line):
         cache, _ = _insert(cache, line, t)
@@ -305,73 +329,78 @@ def fog_shard_tick(
 
     caches = jax.vmap(fill)(caches, fill_lines)
 
-    # Staleness (mutable only): served reads on THIS shard whose version is
-    # older than the key's newest write, psum-reduced to a global count.
+    # 4e. staleness (mutable only): served reads on THIS shard whose version
+    # is older than the key's newest write, psum-reduced to the global count.
     if spec.mutable:
-        served_l = hit_local | my(fog_hit_q) | my(found_q)
+        served_l = hit_local_l | fog_hit_l | my(queue_hit) | my(found)
         got_ts_l = jnp.where(
-            hit_local, ts_local, jnp.where(my(fog_hit_q), my(win_ts), miss_ts)
+            hit_local_l, ts_local_l,
+            jnp.where(fog_hit_l, win_ts_l, served_ts_l),
         )
-        truth_l = latest_ts[jnp.clip(kids_r, 0, spec.key_universe - 1)]
+        truth_l = latest_ts[jnp.clip(my(r_kids), 0, spec.key_universe - 1)]
         n_stale = jax.lax.psum(
             jnp.sum((served_l & (got_ts_l < truth_l)).astype(jnp.int32)), axis
         )
     else:
         n_stale = jnp.int32(0)
 
-    # ---- 6. writer drain (replicated) ---------------------------------------
-    healthy = bs.store_healthy(store, t)
+    # ---- 5. writer drain + store commit (replicated) -----------------------
     queue, n_drained, n_calls = wb.drain(
         queue, t, healthy,
         rate_per_tick=cfg.store.api_rate_per_tick,
         burst=cfg.store.api_burst,
         max_per_tick=cfg.writer_max_per_tick,
     )
-    store = bs.commit_writes(store, n_drained, n_calls, None, cfg.store)
+    store = bs.commit_writes(store, n_drained, n_calls, k_coll, cfg.store)
     if spec.mutable:
         d_kids, d_ts, d_live = wb.drained_entries(
             queue, n_drained, cfg.writer_max_per_tick
         )
         store = bs.commit_keyed_rows(store, d_kids, d_ts, d_live)
-
-    # ---- metrics (global, replicated values) --------------------------------
-    n_reads = jnp.sum(jax.lax.all_gather(reading, axis, tiled=True).astype(jnp.int32))
-    n_hit_local = jax.lax.psum(jnp.sum(hit_local.astype(jnp.int32)), axis)
-    n_fog_hit = jnp.sum(fog_hit_q.astype(jnp.int32))
-    n_resp = jax.lax.psum(jnp.sum(hits_qc.astype(jnp.int32)), axis)
-    wan_rx = n_store_reads.astype(jnp.float32) * txn
     wan_tx = cfg.store.write_txn_bytes(n_drained)
+
+    # ---- 6. metrics: the exact expressions of ``sim_tick`` -----------------
+    n_reads = jnp.sum(reading.astype(jnp.int32))
+    n_hits_local = jax.lax.psum(jnp.sum(hit_local_l.astype(jnp.int32)), axis)
+    n_fog_hits = jnp.sum(fog_hit_q.astype(jnp.int32))
+    lat = (
+        n_hits_local.astype(jnp.float32) * cfg.lat_local
+        + (n_fog_hits + n_queue_hits).astype(jnp.float32)
+        * (cfg.lat_lan_base + cfg.lat_lan_per_node * n)
+        + (n_store_reads + n_failed).astype(jnp.float32) * cfg.lat_store
+    )
+    baseline_table_rows = queue.tail + queue.dropped + queue.coalesced
+    baseline = (
+        n_writes.astype(jnp.float32) * cfg.row_bytes
+        + n_reads.astype(jnp.float32) * cfg.store.read_txn_bytes(baseline_table_rows)
+    )
     metrics = dataclasses.replace(
-        TickMetrics.zeros(),
+        m,
         wan_tx_bytes=wan_tx,
         wan_rx_bytes=wan_rx,
-        lan_bytes=gossip_bytes
-        + jnp.sum(q_need.astype(jnp.float32)) * cfg.query_bytes
-        + n_resp.astype(jnp.float32) * cfg.row_bytes,
+        lan_bytes=lan,
         reads=n_reads,
-        hits_local=n_hit_local,
-        hits_fog=n_fog_hit,
-        misses=n_store_reads,
-        store_found=jnp.sum(found_q.astype(jnp.int32)),
-        store_missing=jnp.sum((store_read & ~in_store).astype(jnp.int32)),
-        writes_gen=n_writes,
+        hits_local=n_hits_local,
+        hits_fog=n_fog_hits,
+        hits_queue=n_queue_hits,
+        misses=n_store_reads + n_failed,
+        store_found=jnp.sum(found.astype(jnp.int32)),
+        store_missing=jnp.sum((store_read & ~found).astype(jnp.int32)),
         writes_drained=n_drained,
         queue_depth=queue.size(),
         queue_dropped=queue.dropped,
         store_txn_bytes=wan_rx + wan_tx,
         store_txns=n_store_reads + n_calls,
-        read_latency_sum=jnp.float32(0.0),
-        baseline_wan_bytes=n_writes.astype(jnp.float32) * cfg.row_bytes
-        + n_reads.astype(jnp.float32)
-        * cfg.store.read_txn_bytes(queue.tail + queue.dropped + queue.coalesced),
+        read_latency_sum=lat,
+        baseline_wan_bytes=baseline,
         coherence_updates=n_coh,
         stale_reads=n_stale,
         writes_coalesced=queue.coalesced - state.queue.coalesced,
         churn_rejoins=n_rejoin,
     )
     new_state = FogShardState(
-        caches=caches, queue=queue, store=store, tick=t + 1, rng=state.rng,
-        latest_ts=latest_ts,
+        caches=caches, queue=queue, store=store, channel=channel,
+        tick=t + 1, rng=rng, latest_ts=latest_ts,
     )
     return new_state, metrics
 
@@ -385,14 +414,15 @@ def run_distributed_sim(
 ):
     """Run the sharded fog for ``ticks`` on ``mesh`` (nodes over ``axis``).
 
-    ``cfg.n_nodes`` must divide evenly over the axis.  Returns the summarized
-    metrics dict (device-replicated scalars pulled to host).
+    ``cfg.n_nodes`` must divide evenly over the axis.  Returns
+    (final FogShardState, TickMetrics series) — the series is bit-identical
+    to ``run_sim(cfg, ticks, seed=seed)`` on either single-host engine
+    (the conformance contract, DESIGN.md §8).
     """
     from jax.experimental.shard_map import shard_map
 
     ndev = mesh.shape[axis]
     assert cfg.n_nodes % ndev == 0, "n_nodes must divide the fog axis"
-    n_local = cfg.n_nodes // ndev
 
     state = init_fog_shard(cfg, cfg.n_nodes, seed)  # host-side full fog
     # Shard caches over the axis; everything else replicated.
@@ -402,11 +432,11 @@ def run_distributed_sim(
         caches=cache_spec,
         queue=jax.tree.map(lambda _: repl, state.queue),
         store=jax.tree.map(lambda _: repl, state.store),
+        channel=jax.tree.map(lambda _: repl, state.channel),
         tick=repl,
         rng=repl,
         latest_ts=repl,
     )
-    other_axes = tuple(a for a in mesh.axis_names if a != axis)
 
     @partial(
         shard_map,
@@ -434,6 +464,5 @@ def run_distributed_sim(
         caches=jax.device_put(state.caches, jax.tree.map(
             lambda s: NamedSharding(mesh, s), cache_spec)),
     )
-    del other_axes, n_local
     final, series = run(state)
     return final, series

@@ -123,3 +123,16 @@ def summarize(series: TickMetrics) -> dict:
         ),
     }
     return out
+
+
+def diff_summaries(a: dict, b: dict) -> dict:
+    """Field-wise diff of two ``summarize`` dicts; empty ⇔ bit-identical.
+
+    The conformance contract (DESIGN.md §8) is EXACT equality, not tolerance:
+    every summary field is an integer count, or a float produced by the same
+    expression tree over those counts, so engines implementing the tick
+    semantics correctly agree bitwise.  Returns ``{field: (a, b)}`` for every
+    mismatching field (including fields present on only one side).
+    """
+    keys = sorted(set(a) | set(b))
+    return {k: (a.get(k), b.get(k)) for k in keys if a.get(k) != b.get(k)}

@@ -89,6 +89,11 @@ class SimConfig:
     queue_capacity: int = 8192
     writer_max_per_tick: int = 64
     store: bs.StoreProfile = dataclasses.field(default_factory=bs.StoreProfile)
+    # Deterministic store-outage windows ((start_tick, duration), ...): at
+    # ``t == start`` the store goes down for ``duration`` ticks.  Static, so
+    # one failure trace drives every engine identically inside lax.scan (the
+    # conformance matrix's §VI fault-tolerance schedules); () = no outages.
+    outage_schedule: tuple[tuple[int, int], ...] = ()
     # Fog-probe backend (DESIGN.md §4): None/"fused" = inline jnp gathers;
     # "xla" | "interpret" | "pallas" dispatch through repro.kernels.ops.
     # NB: the kernel backends break soft-coherence ties by max-data_ts way,
@@ -295,11 +300,12 @@ def _insert_own_rows(caches: CacheState, rows: CacheLine, now) -> CacheState:
 
 
 def _merge_replicate(
-    caches: CacheState, rows: CacheLine, delivered: jax.Array, now
+    caches: CacheState, rows: CacheLine, delivered: jax.Array, now,
+    node_ids: jax.Array | None = None,
 ) -> CacheState:
     from repro.core.coherence import merge_broadcasts
 
-    caches, _ev = merge_broadcasts(caches, rows, delivered, now)
+    caches, _ev = merge_broadcasts(caches, rows, delivered, now, node_ids=node_ids)
     return caches
 
 
@@ -372,6 +378,9 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
     node_ids = jnp.arange(n, dtype=jnp.int32)
     caches = state.caches
     latest_ts = state.latest_ts
+    store_in = state.store
+    if cfg.outage_schedule:
+        store_in = bs.apply_outage_schedule(store_in, t, cfg.outage_schedule)
 
     # ---- 0. churn: rejoining nodes cold-start -----------------------------
     if spec.has_churn:
@@ -487,18 +496,18 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
     n_responses = jnp.sum(hit_fog_cq.astype(jnp.int32))
 
     # 4c. writer-buffer forwarding, then the backing store (§VI).
-    healthy = bs.store_healthy(state.store, t)
+    healthy = bs.store_healthy(store_in, t)
     need_store_slot = need_fog_slot & ~fog_hit_slot
     if spec.mutable:
         kids_q = r_kids[r_gidx]
         (queue_hit_slot, store_read_slot, failed_slot, found_slot,
          served_ts_slot) = _resolve_backstop_keyed(
-            queue, state.store, healthy, need_store_slot, kids_q
+            queue, store_in, healthy, need_store_slot, kids_q
         )
     else:
         enq_idx_slot = r_tick[r_gidx] * n + src[r_gidx]
         queue_hit_slot, store_read_slot, failed_slot, found_slot, _ = _resolve_backstop(
-            queue, state.store, healthy, need_store_slot, enq_idx_slot
+            queue, store_in, healthy, need_store_slot, enq_idx_slot
         )
     n_store_reads = jnp.sum(store_read_slot.astype(jnp.int32))
     n_queue_hits = jnp.sum(queue_hit_slot.astype(jnp.int32))
@@ -507,10 +516,10 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
         lan + n_fog_queries * cfg.query_bytes
         + (n_responses + n_queue_hits) * cfg.row_bytes
     )
-    txn = cfg.store.read_txn_bytes(state.store.drained_total)
+    txn = cfg.store.read_txn_bytes(store_in.drained_total)
     wan_rx = n_store_reads.astype(jnp.float32) * txn
     store = dataclasses.replace(
-        state.store, api_calls=state.store.api_calls + n_store_reads
+        store_in, api_calls=store_in.api_calls + n_store_reads
     )
 
     # 4d. fill the reader's local cache from fog/queue/store responses.
@@ -689,3 +698,32 @@ def run_sim(
     """
     state = init_sim(dataclasses.replace(cfg, seed=seed))
     return _run_scan(cfg, ticks, state, metrics_every, engine)
+
+
+def run_any_engine(
+    cfg: SimConfig, ticks: int, seed: int = 0, *,
+    engine: str = "fused", metrics_every: int = 1, axis: str = "data",
+):
+    """Engine-agnostic dispatcher for the conformance contract (DESIGN.md §8).
+
+    ``engine`` is ``"reference"`` / ``"fused"`` (single-host ``run_sim``) or
+    ``"distributed"`` — the ``shard_map`` runtime on a 1-D mesh over ALL
+    visible devices (``cfg.n_nodes`` must divide the device count; force the
+    count with ``XLA_FLAGS=--xla_force_host_platform_device_count=K``).
+
+    Every engine returns ``(final_state, TickMetrics series)`` with the same
+    series shape; ``tests/conformance.py`` asserts the series (and therefore
+    the summarized metrics) are bit-identical across all three for every
+    scenario × seed × outage schedule.
+    """
+    if engine == "distributed":
+        if metrics_every != 1:
+            raise ValueError("metrics_every is a single-host engine knob")
+        from repro.core.distributed import run_distributed_sim
+
+        ndev = len(jax.devices())
+        axis_type = getattr(jax.sharding, "AxisType", None)
+        kw = dict(axis_types=(axis_type.Auto,)) if axis_type is not None else {}
+        mesh = jax.make_mesh((ndev,), (axis,), **kw)
+        return run_distributed_sim(mesh, cfg, ticks, axis=axis, seed=seed)
+    return run_sim(cfg, ticks, seed=seed, engine=engine, metrics_every=metrics_every)

@@ -58,6 +58,9 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
     node_ids = jnp.arange(n, dtype=jnp.int32)
     caches = state.caches
     latest_ts = state.latest_ts
+    store_in = state.store
+    if cfg.outage_schedule:
+        store_in = bs.apply_outage_schedule(store_in, t, cfg.outage_schedule)
 
     # ---- 0. churn: rejoining nodes cold-start -----------------------------
     if spec.has_churn:
@@ -175,16 +178,16 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
     n_responses = jnp.sum((hits_qc & need_fog[:, None]).astype(jnp.int32))
 
     # 4c. writer-buffer forwarding, then the backing store (§VI).
-    healthy = bs.store_healthy(state.store, t)
+    healthy = bs.store_healthy(store_in, t)
     need_store = need_fog & ~fog_hit
     if spec.mutable:
         queue_hit, store_read, failed, found, served_ts = _resolve_backstop_keyed(
-            queue, state.store, healthy, need_store, r_kids
+            queue, store_in, healthy, need_store, r_kids
         )
     else:
         enq_idx = r_tick * n + src  # FIFO enqueue order = (tick, node)
         queue_hit, store_read, failed, found, _ = _resolve_backstop(
-            queue, state.store, healthy, need_store, enq_idx
+            queue, store_in, healthy, need_store, enq_idx
         )
     n_store_reads = jnp.sum(store_read.astype(jnp.int32))
     n_queue_hits = jnp.sum(queue_hit.astype(jnp.int32))
@@ -193,10 +196,10 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
         lan + n_fog_queries * cfg.query_bytes
         + (n_responses + n_queue_hits) * cfg.row_bytes
     )
-    txn = cfg.store.read_txn_bytes(state.store.drained_total)
+    txn = cfg.store.read_txn_bytes(store_in.drained_total)
     wan_rx = n_store_reads.astype(jnp.float32) * txn
     store = dataclasses.replace(
-        state.store, api_calls=state.store.api_calls + n_store_reads
+        store_in, api_calls=store_in.api_calls + n_store_reads
     )
 
     # 4d. fill the reader's local cache from fog/queue/store responses.

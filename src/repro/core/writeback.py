@@ -245,6 +245,23 @@ def enqueue_keyed(
     )
 
 
+def ring_accounting(q: WriteQueue) -> dict:
+    """Host-side conservation-law components of the ring (Python ints).
+
+    The keyed-mode invariant checked by the conformance and property suites:
+    ``writes_gen == appended + coalesced + dropped`` per run, with
+    ``appended == drained + pending`` (monotone tail = everything that ever
+    entered the ring).  Holds on every engine — the queue is a replicated
+    global on the distributed runtime, so each shard observes it exactly.
+    """
+    return {
+        "appended": int(q.tail),
+        "pending": int(q.size()),
+        "dropped": int(q.dropped),
+        "coalesced": int(q.coalesced),
+    }
+
+
 def drained_entries(
     q: WriteQueue, n_drained: jax.Array, max_per_tick: int
 ) -> tuple[jax.Array, jax.Array, jax.Array]:

@@ -1,0 +1,179 @@
+"""The engine-agnostic conformance contract for the FLIC tick semantics.
+
+Three engines implement ONE tick semantics (DESIGN.md §8):
+
+* ``reference`` — the retained pre-fusion per-pass pipeline
+  (``core/simulator_ref.py``);
+* ``fused``     — the batched hot path (``core/simulator.py``);
+* ``distributed`` — the ``shard_map`` runtime (``core/distributed.py``),
+  run on a 1-D mesh over every visible device (force 8 host devices with
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+
+This module is the single source of truth for WHAT must match: the case
+matrix (every ``workload.SCENARIOS`` preset, §VI outage schedules, loss-model
+and insert-policy variants) and the bit-identity assertion — the full
+``TickMetrics`` SERIES, and therefore the summarized metrics, must be equal
+bitwise, not approximately (``metrics.diff_summaries``).  Per-case semantic
+floors (``expect_positive``) guarantee the exercised paths are live, not
+vacuously equal: ring forwarding under outages, cold churn rejoins, live
+coherence sweeps, write coalescing.
+
+Used three ways:
+
+* imported by the pytest matrix (``tests/test_conformance.py`` drives it in
+  an 8-device subprocess via the ``forced_devices_run`` fixture);
+* imported by single-host tests (``tests/test_sim_equivalence.py`` reuses
+  ``assert_series_identical``);
+* run directly — ``python -m conformance [--cases a,b] [--seeds 0,1]
+  [--engines reference,fused,distributed]`` prints a JSON report and exits
+  nonzero on any divergence (the CI distributed job invokes exactly this).
+
+Adding a new engine = one branch in ``simulator.run_any_engine`` returning
+the standard ``(final_state, TickMetrics series)`` pair, plus its name in
+``ENGINES`` here.  Nothing else: the cases and assertions are engine-blind.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.core.metrics import diff_summaries, summarize
+from repro.core.simulator import SimConfig, run_any_engine
+from repro.core.workload import SCENARIOS, WorkloadSpec
+
+ENGINES = ("reference", "fused", "distributed")
+SEEDS = (0, 1)
+
+# Divides every forced host-device count in {1, 2, 4, 8}.
+N_NODES = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class ConformanceCase:
+    cfg: SimConfig
+    ticks: int
+    # ``summarize`` fields that must be strictly positive on every seed —
+    # proof the exercised semantics are live, not vacuously identical.
+    expect_positive: tuple[str, ...] = ("reads",)
+
+
+def _case(spec: WorkloadSpec, ticks: int, expect: tuple[str, ...] = (), **cfg_kw):
+    cfg = SimConfig(
+        n_nodes=N_NODES, cache_lines=cfg_kw.pop("cache_lines", 64),
+        loss_prob=cfg_kw.pop("loss_prob", 0.02), workload=spec, **cfg_kw,
+    )
+    return ConformanceCase(cfg, ticks, ("reads",) + expect)
+
+
+_MUT = ("coherence_updates", "writes_coalesced")
+
+CASES: dict[str, ConformanceCase] = {
+    # -- every workload.SCENARIOS preset ------------------------------------
+    "paper": _case(SCENARIOS["paper"], 90),
+    "zipf": _case(SCENARIOS["zipf"], 100, _MUT),
+    "zipf_hot": _case(SCENARIOS["zipf_hot"], 100, _MUT),
+    "bursty": _case(SCENARIOS["bursty"], 130, _MUT),
+    "diurnal": _case(SCENARIOS["diurnal"], 150, _MUT),
+    "churn": _case(SCENARIOS["churn"], 150, _MUT + ("churn_rejoins",)),
+    "storm": _case(SCENARIOS["storm"], 130, _MUT + ("churn_rejoins",)),
+    # -- §VI outage schedules (deterministic, shared by all engines) --------
+    "paper_outage": _case(
+        SCENARIOS["paper"], 90, ("hit_queue_ratio",),
+        outage_schedule=((25, 30),),
+    ),
+    "zipf_outage": _case(
+        WorkloadSpec(popularity="zipf", key_universe=4096, zipf_alpha=0.9),
+        110, _MUT + ("hit_queue_ratio",),
+        read_period=5, loss_prob=0.05, cache_lines=32,
+        outage_schedule=((30, 40),),
+    ),
+    # Outage overlapping a churn epoch boundary: nodes rejoin COLD while the
+    # store is down, so their reads can only be served by fog peers or
+    # writer-ring forwarding (the §VI path the matrix must keep live).
+    "churn_outage": _case(
+        WorkloadSpec(popularity="zipf", key_universe=4096, zipf_alpha=0.9,
+                     churn_period=40, churn_fraction=0.3),
+        110, _MUT + ("churn_rejoins", "hit_queue_ratio"),
+        read_period=5, loss_prob=0.05, cache_lines=32,
+        outage_schedule=((35, 40),),
+    ),
+    # -- loss-model / insert-policy variants --------------------------------
+    "paper_ge": _case(
+        SCENARIOS["paper"], 70, loss_model="gilbert_elliott",
+    ),
+    "paper_replicate": _case(
+        SCENARIOS["paper"], 60,
+        insert_policy="replicate", loss_prob=0.1, cache_lines=32,
+    ),
+}
+
+
+def assert_series_identical(a, b, label: str = ""):
+    """Every ``TickMetrics`` field must match bit-for-bit over the series."""
+    for f in a.__dataclass_fields__:
+        xa, xb = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        np.testing.assert_array_equal(
+            xa, xb, err_msg=f"{label}: TickMetrics.{f} diverged"
+        )
+
+
+def run_case(name: str, seed: int, engine: str):
+    """Run one case on one engine; returns (final_state, TickMetrics series)."""
+    case = CASES[name]
+    return run_any_engine(case.cfg, case.ticks, seed=seed, engine=engine)
+
+
+def case_report(name: str, seed: int, engines=ENGINES) -> dict:
+    """Run one case on every engine and enforce the contract.
+
+    Returns ``{engine: summary}``; raises AssertionError naming the first
+    diverging field if any engine's series or summary differs from the
+    first engine's, or if a semantic floor (``expect_positive``) is not met.
+    """
+    case = CASES[name]
+    series_by, summary_by = {}, {}
+    for engine in engines:
+        _, series = run_case(name, seed, engine)
+        series_by[engine] = series
+        summary_by[engine] = summarize(series)
+    base = engines[0]
+    for engine in engines[1:]:
+        assert_series_identical(
+            series_by[base], series_by[engine],
+            f"{name}/seed{seed}: {base} vs {engine}",
+        )
+        d = diff_summaries(summary_by[base], summary_by[engine])
+        assert not d, f"{name}/seed{seed}: {base} vs {engine} summary diff {d}"
+    for field in case.expect_positive:
+        assert summary_by[base][field] > 0, (
+            f"{name}/seed{seed}: expected {field} > 0, got "
+            f"{summary_by[base][field]} — the exercised path is not live"
+        )
+    return summary_by
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--cases", default=None,
+                   help="comma-separated case names (default: all)")
+    p.add_argument("--seeds", default=",".join(str(s) for s in SEEDS))
+    p.add_argument("--engines", default=",".join(ENGINES))
+    a = p.parse_args(argv)
+    names = a.cases.split(",") if a.cases else list(CASES)
+    seeds = [int(s) for s in a.seeds.split(",")]
+    engines = tuple(a.engines.split(","))
+    report: dict = {}
+    for name in names:
+        for seed in seeds:
+            report.setdefault(name, {})[str(seed)] = case_report(
+                name, seed, engines
+            )
+    print(json.dumps(report))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,9 @@
 import os
+import subprocess
 import sys
+import textwrap
+
+import pytest
 
 # Make `repro` importable regardless of how pytest is invoked.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -7,3 +11,36 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # Smoke tests must see the host as-is (1 CPU device) — the 512-device flag
 # belongs ONLY to repro.launch.dryrun (it sets XLA_FLAGS itself).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+_TESTS = os.path.dirname(__file__)
+
+
+@pytest.fixture(scope="session")
+def forced_devices_run():
+    """Run Python code in a subprocess with XLA forced to N host devices.
+
+    The multi-device tests (sharded fog, conformance matrix, AOT dry-run)
+    need ``--xla_force_host_platform_device_count`` set BEFORE jax imports,
+    while the rest of the suite keeps the host's single CPU device — so they
+    run in a subprocess.  The child sees ``src`` and ``tests`` on PYTHONPATH
+    (the latter so it can ``import conformance``).
+
+    Returns a callable ``run(code, timeout=540, n_devices=8) -> stdout``
+    that asserts a zero exit status.
+    """
+
+    def run(code: str, timeout: int = 540, n_devices: int = 8) -> str:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n_devices}"
+        )
+        env["PYTHONPATH"] = os.pathsep.join([_SRC, _TESTS])
+        out = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(code)],
+            capture_output=True, text=True, timeout=timeout, env=env,
+        )
+        assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+        return out.stdout
+
+    return run

@@ -1,0 +1,61 @@
+"""The three-way conformance matrix: reference vs fused vs distributed.
+
+Drives ``tests/conformance.py`` — the engine-agnostic contract — in an
+8-forced-host-device subprocess: every ``workload.SCENARIOS`` preset plus
+§VI outage schedules, loss-model and insert-policy variants, ≥2 seeds,
+asserting the full ``TickMetrics`` series AND the summarized metrics are
+bit-identical across all three engines, with per-case semantic floors
+(ring forwarding live under outages, cold rejoins on churn, live coherence
+sweeps and write coalescing on mutable scenarios).
+
+Cases are partitioned into groups so each subprocess (compile + 2 seeds ×
+3 engines per case) stays well inside the timeout; the subprocess performs
+the series-level assertions and returns the summaries, which the host
+re-checks for defense in depth.
+"""
+import json
+
+import pytest
+
+from conformance import CASES, ENGINES, SEEDS
+
+GROUPS = {
+    "scenarios_a": ("paper", "zipf", "zipf_hot", "paper_ge"),
+    "scenarios_b": ("bursty", "diurnal", "churn", "storm"),
+    "outages": ("paper_outage", "zipf_outage", "churn_outage", "paper_replicate"),
+}
+
+
+def test_groups_cover_every_case():
+    """The matrix must not silently drop a case (e.g. a new SCENARIOS
+    preset added to conformance.CASES but not to a group)."""
+    grouped = [name for g in GROUPS.values() for name in g]
+    assert sorted(grouped) == sorted(CASES)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("group", sorted(GROUPS), ids=str)
+def test_three_way_matrix(forced_devices_run, group):
+    names = GROUPS[group]
+    out = forced_devices_run(f"""
+        import json
+        import conformance
+        report = {{}}
+        for name in {names!r}:
+            for seed in {tuple(SEEDS)!r}:
+                report.setdefault(name, {{}})[str(seed)] = (
+                    conformance.case_report(name, seed)
+                )
+        print("CONFORMANCE=" + json.dumps(report))
+    """)
+    line = [l for l in out.strip().splitlines() if l.startswith("CONFORMANCE=")][-1]
+    report = json.loads(line[len("CONFORMANCE="):])
+    assert sorted(report) == sorted(names)
+    for name, by_seed in report.items():
+        assert sorted(by_seed) == sorted(str(s) for s in SEEDS)
+        for seed, by_engine in by_seed.items():
+            base = by_engine[ENGINES[0]]
+            for engine in ENGINES:
+                assert by_engine[engine] == base, (name, seed, engine)
+            for field in CASES[name].expect_positive:
+                assert base[field] > 0, (name, seed, field)

@@ -9,21 +9,21 @@ timestamp wins).  We assert the full ``TickMetrics`` SERIES (not summaries)
 is identical to the retained pre-fusion reference path
 (``simulator_ref.sim_tick_ref``) across configs × seeds × insert policies ×
 loss models, and for the kernel probe backends.
+
+The single-host pairs here are the FAST tier of the conformance contract;
+the full three-way matrix (reference vs fused vs distributed on 8 forced
+host devices, every ``workload.SCENARIOS`` preset, outage schedules) lives
+in ``tests/conformance.py`` + ``tests/test_conformance.py``.
 """
 import dataclasses
 
 import numpy as np
 import pytest
 
+from conformance import assert_series_identical
 from repro.core.metrics import summarize
 from repro.core.simulator import SimConfig, run_sim
 from repro.core.workload import SCENARIOS, WorkloadSpec
-
-
-def assert_series_identical(a, b):
-    for f in a.__dataclass_fields__:
-        xa, xb = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
-        np.testing.assert_array_equal(xa, xb, err_msg=f"TickMetrics.{f} diverged")
 
 
 _slow = pytest.mark.slow
@@ -159,6 +159,35 @@ def test_metrics_every_preserves_summary():
             assert st[k] == pytest.approx(sf[k], rel=1e-5), k
         else:
             assert st[k] == sf[k], k
+
+
+@pytest.mark.parametrize(
+    "spec", [
+        WorkloadSpec(),
+        pytest.param(
+            WorkloadSpec(popularity="zipf", key_universe=512, zipf_alpha=0.9),
+            marks=pytest.mark.slow,
+        ),
+    ],
+    ids=["stream", "zipf"],
+)
+def test_outage_schedule_equivalent_and_forwards(spec):
+    """``SimConfig.outage_schedule`` drives the same deterministic §VI
+    failure trace through both single-host engines inside lax.scan: the
+    series stays bit-identical AND the outage window actually produces
+    writer-ring forwarded reads with store reads health-gated off."""
+    cfg = SimConfig(
+        n_nodes=10, cache_lines=40, loss_prob=0.02, read_period=5,
+        workload=spec, outage_schedule=((25, 30),),
+    )
+    _, ref = run_sim(cfg, 80, seed=0, engine="reference")
+    _, fused = run_sim(cfg, 80, seed=0, engine="fused")
+    assert_series_identical(ref, fused)
+    win = slice(25, 55)
+    assert int(np.sum(np.asarray(fused.hits_queue)[win])) > 0
+    n_store = int(np.sum(np.asarray(fused.store_found)[win])
+                  + np.sum(np.asarray(fused.store_missing)[win]))
+    assert n_store == 0  # health gating: no synchronous store reads while down
 
 
 def test_outage_semantics_shared_between_engines():
