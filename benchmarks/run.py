@@ -30,14 +30,19 @@ def main() -> None:
     from benchmarks.sim_bench import bench_sim
     bench_sim(
         ticks=int(600 * scale),
-        # quick mode skips N=500: the reference engine alone needs ~80 s there
+        # quick mode skips N=500 and the fused-only N=1000 row: the
+        # reference engine alone needs ~80 s at N=500
         node_counts=(50, 200) if quick else (50, 200, 500),
+        fused_only_counts=() if quick else (1000,),
     )
 
     from benchmarks.scenario_bench import bench_scenarios
     bench_scenarios(
         ticks=int(600 * scale),
         scenarios=("paper", "zipf", "churn") if quick else None,
+        # quick mode skips the backend sweep (the interpret backend is the
+        # Pallas interpreter — far too slow for a quick pass)
+        backend_ticks=0 if quick else 150,
     )
 
     # Distributed 1/2/4/8-shard sweep -> BENCH_distributed.json (subprocess:

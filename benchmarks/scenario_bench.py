@@ -9,7 +9,13 @@ engine at the paper's geometry:
 * ``stale_read_ratio`` / ``coherence_updates`` / ``writes_coalesced`` —
   the soft-coherence observables that only exist off the write-once stream;
 * ``fused_ticks_per_s`` — engine throughput (the scenario machinery must not
-  tank the hot path; the "paper" row is the PR-1 regression gate).
+  tank the hot path; the "paper" row is the PR-1 regression gate);
+* ``backend_ticks_per_s`` — a shorter per-scenario sweep of the kernel
+  dispatch (``probe_backend``): ``fused`` (inline jnp), ``xla`` (the
+  pure-jnp oracles in ``kernels/ref.py``) and ``interpret`` (the Pallas
+  kernel bodies executed by the interpreter — the CPU-correct stand-in for
+  the TPU lowering), so the probe/update kernel win (or interpreter
+  overhead) is visible per scenario.
 
 Emits ``BENCH_scenarios.json`` plus harness CSV lines.
 
@@ -17,6 +23,7 @@ Usage: ``PYTHONPATH=src python -m benchmarks.scenario_bench [--quick]``
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import sys
 import time
@@ -29,6 +36,8 @@ from repro.core.simulator import SimConfig, run_sim
 from repro.core.workload import SCENARIOS
 
 TICKS = 600
+BACKEND_TICKS = 150
+BACKENDS = ("fused", "xla", "interpret")
 N_NODES = 50
 
 
@@ -39,8 +48,25 @@ def _cfg_for(name: str, n_nodes: int) -> SimConfig:
     )
 
 
+def _backend_sweep(cfg: SimConfig, name: str, ticks: int) -> dict:
+    """ticks/s per ``probe_backend`` (shorter runs; compile excluded)."""
+    rates = {}
+    for backend in BACKENDS:
+        bcfg = dataclasses.replace(cfg, probe_backend=backend)
+        _, series = run_sim(bcfg, ticks, seed=0)
+        jax.block_until_ready(series.reads)
+        t0 = time.perf_counter()
+        _, series = run_sim(bcfg, ticks, seed=1)
+        jax.block_until_ready(series.reads)
+        rates[backend] = ticks / (time.perf_counter() - t0)
+        emit(f"scenario.{name}.backend.{backend}", 0.0,
+             f"ticks_per_s={rates[backend]:.1f}")
+    return rates
+
+
 def bench_scenarios(ticks: int = TICKS, n_nodes: int = N_NODES,
-                    scenarios=None, out_path: str = "BENCH_scenarios.json") -> dict:
+                    scenarios=None, backend_ticks: int = BACKEND_TICKS,
+                    out_path: str = "BENCH_scenarios.json") -> dict:
     results = {"ticks": ticks, "n_nodes": n_nodes, "scenarios": []}
     for name in (scenarios or SCENARIOS):
         cfg = _cfg_for(name, n_nodes)
@@ -63,6 +89,8 @@ def bench_scenarios(ticks: int = TICKS, n_nodes: int = N_NODES,
             "writes_coalesced": s["writes_coalesced"],
             "churn_rejoins": s["churn_rejoins"],
         }
+        if backend_ticks:
+            row["backend_ticks_per_s"] = _backend_sweep(cfg, name, backend_ticks)
         results["scenarios"].append(row)
         emit(
             f"scenario.{name}", 1e6 * secs / ticks,
@@ -81,6 +109,7 @@ def main() -> None:
     res = bench_scenarios(
         ticks=150 if quick else TICKS,
         scenarios=("paper", "zipf", "churn") if quick else None,
+        backend_ticks=0 if quick else BACKEND_TICKS,
     )
     paper = next(r for r in res["scenarios"] if r["scenario"] == "paper")
     # the workload layer must not regress the default hot path

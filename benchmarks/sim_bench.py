@@ -1,13 +1,18 @@
 """Simulator throughput benchmark: old (reference) path vs fused engine.
 
 Measures steady-state ticks/sec of ``run_sim`` at N ∈ {50, 200, 500} on the
-directory-policy paper workload, for both engines, and emits
-``BENCH_sim.json`` (plus harness CSV lines via ``benchmarks.common.emit``).
+directory-policy paper workload, for both engines, plus a fused-only
+N=1000 city-scale row (the reference engine is impractically slow there —
+minutes per run — and its baseline is already established by the smaller
+rows), and emits ``BENCH_sim.json`` (plus harness CSV lines via
+``benchmarks.common.emit``).
 
 The N=200 / 600-tick directory config is the acceptance gate for the fused
 engine: it must clear a 3x speedup on the same host (ISSUE 1 /
 DESIGN.md §3); ``tests/test_sim_equivalence.py`` separately proves the two
 engines emit identical metrics, so this is a pure implementation race.
+The N ∈ {500, 1000} rows watch the scaling cliff the scatter-lean
+primitives flattened (DESIGN.md §3).
 
 Usage: ``PYTHONPATH=src python -m benchmarks.sim_bench [--quick]``
 """
@@ -23,6 +28,7 @@ from repro.core.simulator import SimConfig, run_sim
 from benchmarks.common import emit
 
 NODE_COUNTS = (50, 200, 500)
+FUSED_ONLY_COUNTS = (1000,)
 TICKS = 600
 
 
@@ -37,6 +43,7 @@ def _time_run(cfg: SimConfig, ticks: int, engine: str) -> float:
 
 
 def bench_sim(ticks: int = TICKS, node_counts=NODE_COUNTS,
+              fused_only_counts=FUSED_ONLY_COUNTS,
               out_path: str = "BENCH_sim.json") -> dict:
     results = {"ticks": ticks, "configs": []}
     for n in node_counts:
@@ -54,6 +61,13 @@ def bench_sim(ticks: int = TICKS, node_counts=NODE_COUNTS,
         emit(f"sim.speedup.n{n}", 0.0, f"x{row['speedup']:.2f}")
         results["configs"].append(row)
 
+    for n in fused_only_counts:
+        cfg = SimConfig(n_nodes=n, cache_lines=200, insert_policy="directory")
+        secs = _time_run(cfg, ticks, "fused")
+        rate = ticks / secs
+        emit(f"sim.fused.n{n}", 1e6 * secs / ticks, f"ticks_per_s={rate:.1f}")
+        results["configs"].append({"n_nodes": n, "fused_ticks_per_s": rate})
+
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2)
     return results
@@ -64,6 +78,7 @@ def main() -> None:
     res = bench_sim(
         ticks=150 if quick else TICKS,
         node_counts=(50, 200) if quick else NODE_COUNTS,
+        fused_only_counts=() if quick else FUSED_ONLY_COUNTS,
     )
     gate = next((r for r in res["configs"] if r["n_nodes"] == 200), None)
     if gate is not None and not quick:

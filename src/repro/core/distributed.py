@@ -56,7 +56,7 @@ from repro.core.cache_state import CacheLine, CacheState, empty_cache
 from repro.core.coherence import GilbertElliott
 from repro.core.flic import insert as _insert
 from repro.core.flic import invalidate_nodes, update_rows
-from repro.core.metrics import TickMetrics
+from repro.core.metrics import TickMetrics, windowed_scan
 from repro.core.simulator import (
     SimConfig,
     _delivery_mask,
@@ -163,9 +163,11 @@ def fog_shard_tick(
         caches = _insert_own_rows(caches, rows_local, t)
         if spec.mutable:
             # LIVE coherence sweep: all n broadcast rows against this shard's
-            # caches, delivery mask sliced to the local receivers.
+            # caches, delivery mask sliced to the local receivers.  Same
+            # kernel-backend dispatch as the fused engine (DESIGN.md §4).
             caches, n_coh_l = update_rows(
-                caches, rows, my(delivered), t, node_ids=node_ids
+                caches, rows, my(delivered), t, node_ids=node_ids,
+                backend=cfg.probe_backend,
             )
             n_coh = jax.lax.psum(n_coh_l, axis)
         else:
@@ -411,6 +413,7 @@ def run_distributed_sim(
     ticks: int,
     axis: str = "data",
     seed: int = 0,
+    metrics_every: int = 1,
 ):
     """Run the sharded fog for ``ticks`` on ``mesh`` (nodes over ``axis``).
 
@@ -418,11 +421,27 @@ def run_distributed_sim(
     (final FogShardState, TickMetrics series) — the series is bit-identical
     to ``run_sim(cfg, ticks, seed=seed)`` on either single-host engine
     (the conformance contract, DESIGN.md §8).
+
+    ``metrics_every`` thins the scanned metrics stack exactly like the
+    single-host engines: a windowed inner scan folds ``metrics_every`` ticks
+    into one aggregated row per shard (``metrics.accumulate`` — flows
+    summed, gauges last), so only one row per window is stacked and
+    replicated out of the mesh.  The per-tick collectives themselves are
+    NOT deferred across the window: the float metric fields
+    (``read_latency_sum``, ``lan_bytes``, ...) are per-tick expression
+    trees over psum-reduced counts, and summing counts before the float
+    expressions would break the bitwise conformance contract (§8).
     """
     from jax.experimental.shard_map import shard_map
 
     ndev = mesh.shape[axis]
     assert cfg.n_nodes % ndev == 0, "n_nodes must divide the fog axis"
+    if ticks % metrics_every != 0:
+        # fail before device_put/compile; windowed_scan re-checks under jit
+        raise ValueError(
+            f"distributed metrics thinning aggregates fixed windows: ticks "
+            f"({ticks}) must be divisible by metrics_every ({metrics_every})"
+        )
 
     state = init_fog_shard(cfg, cfg.n_nodes, seed)  # host-side full fog
     # Shard caches over the axis; everything else replicated.
@@ -448,13 +467,12 @@ def run_distributed_sim(
     def tick_shard(st):
         return fog_shard_tick(cfg, axis, st)
 
-    def scan_body(st, _):
-        st, m = tick_shard(st)
-        return st, m
-
-    @jax.jit
+    @partial(jax.jit, donate_argnums=(0,))
     def run(st):
-        return jax.lax.scan(scan_body, st, None, length=ticks)
+        # ONE thinning definition shared with the single-host engines
+        # (metrics.windowed_scan) — the windows cannot drift between
+        # engines, which the bitwise conformance contract depends on (§8).
+        return windowed_scan(tick_shard, st, ticks, metrics_every)
 
     state = jax.device_put(
         state, NamedSharding(mesh, P())

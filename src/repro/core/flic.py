@@ -15,7 +15,7 @@ Semantics (paper §II):
       line is returned so the caller can enqueue a write-back.
 * ``lookup_batch`` / ``insert_batch`` — scan/vmap conveniences.
 
-Everything is branch-free (``jnp.where`` / one-hot scatters) so it lowers to
+Everything is branch-free (``jnp.where`` / indexed scatters) so it lowers to
 clean XLA and is directly portable into the Pallas kernels in
 ``repro.kernels``.
 """
@@ -154,7 +154,13 @@ def insert_batch(
 # These are the hot-path versions of ``insert`` / ``local_lookup`` for a
 # *batched* ``CacheState`` with leading node axis N: each node i upserts or
 # probes its own lane i.  Per field this lowers to ONE gather of the probed
-# set row and ONE one-hot scatter — no vmap-of-scalar chains (DESIGN.md §3).
+# set row and ONE scatter-lean write — no vmap-of-scalar chains and no
+# (N, S, W)-materializing one-hot selects (DESIGN.md §3).  The scatter form
+# matters on CPU/TPU alike: each lane writes exactly ONE flat line index
+# ``(node*S + set)*W + way`` — unique per lane, so the scatter carries the
+# uniqueness hint and skips XLA's conflict-safe serialization; no-op lanes
+# keep the masked out-of-bounds-drop trick (all routed to the single OOB
+# slot, never applied).
 # Semantics match ``insert``/``local_lookup`` exactly: first-matching-way on
 # hit, first-invalid-else-LRU victim, strictly-newer timestamp overwrites.
 # --------------------------------------------------------------------------
@@ -193,9 +199,10 @@ def insert_rows(
     no-ops, exactly like the scalar path.
     """
     n = caches.tags.shape[0]
+    s_sets, w_ways = caches.num_sets, caches.num_ways
     keys = jnp.asarray(lines.key, jnp.uint32)
     now = jnp.asarray(now, jnp.int32)
-    sidx = (keys % jnp.uint32(caches.num_sets)).astype(jnp.int32)   # (N,)
+    sidx = (keys % jnp.uint32(s_sets)).astype(jnp.int32)            # (N,)
 
     tags_r = _gather_rows(caches.tags, sidx)          # (N, W)
     valid_r = _gather_rows(caches.valid, sidx)
@@ -222,11 +229,18 @@ def insert_rows(
         dirty=displaced & caches.dirty[rows, sidx, way],
     )
 
-    # Masked scatter: route no-op lanes to an out-of-bounds set (dropped).
-    s = jnp.where(do_write, sidx, caches.num_sets)
+    # Scatter-lean write: each lane targets its own FLAT line index (no-op
+    # lanes route to the shared out-of-bounds slot and are dropped).  Live
+    # indices are unique by construction — one slot per lane — and the
+    # dropped ones are never applied, so the uniqueness hint is sound; it
+    # lets XLA skip the conflict-safe serialization of the general scatter.
+    flat = jnp.where(do_write, (rows * s_sets + sidx) * w_ways + way,
+                     n * s_sets * w_ways)
 
     def wr(field, value):
-        return field.at[rows, s, way].set(value.astype(field.dtype), mode="drop")
+        return field.reshape(-1).at[flat].set(
+            value.astype(field.dtype), mode="drop", unique_indices=True
+        ).reshape(field.shape)
 
     caches = CacheState(
         tags=wr(caches.tags, keys),
@@ -236,7 +250,9 @@ def insert_rows(
         valid=wr(caches.valid, jnp.ones((n,), bool)),
         dirty=wr(caches.dirty, jnp.asarray(lines.dirty)),
         last_use=wr(caches.last_use, jnp.full((n,), now)),
-        data=caches.data.at[rows, s, way].set(lines.data, mode="drop"),
+        data=caches.data.reshape(n * s_sets * w_ways, -1).at[flat].set(
+            lines.data, mode="drop", unique_indices=True
+        ).reshape(caches.data.shape),
     )
     return caches, evicted
 
@@ -247,7 +263,7 @@ def lookup_rows(
     """Probe one key per node across a batched cache (leading axis N).
 
     Equivalent to ``jax.vmap(local_lookup)`` with one gather per field and a
-    single one-hot LRU scatter.
+    single sorted-unique flat-index LRU scatter.
     """
     n = caches.tags.shape[0]
     keys = jnp.asarray(keys, jnp.uint32)
@@ -269,12 +285,16 @@ def lookup_rows(
         ),
     )
     if update_lru:
-        s = jnp.where(hit, sidx, caches.num_sets)
+        oob = n * caches.num_sets * caches.num_ways
+        flat = jnp.where(
+            hit, (rows * caches.num_sets + sidx) * caches.num_ways + way, oob
+        )
         caches = dataclasses.replace(
             caches,
-            last_use=caches.last_use.at[rows, s, way].set(
-                jnp.full((n,), jnp.asarray(now, jnp.int32)), mode="drop"
-            ),
+            last_use=caches.last_use.reshape(-1).at[flat].set(
+                jnp.full((n,), jnp.asarray(now, jnp.int32)),
+                mode="drop", unique_indices=True,
+            ).reshape(caches.last_use.shape),
         )
     return caches, res
 
@@ -285,60 +305,122 @@ def update_rows(
     delivered: jax.Array,
     now: jax.Array,
     node_ids: jax.Array | None = None,
+    backend: str | None = None,
 ) -> tuple[CacheState, jax.Array]:
     """Batched coherence-update sweep: R broadcast rows against N caches.
 
     The directory policy's coherence traffic (paper §I.A.a): every hearer
     that already HOLDS a broadcast key updates its resident copy in place iff
-    the incoming ``data_ts`` is strictly newer — no insert, no eviction.  One
-    (N, R, W) gather + one one-hot scatter per touched field.
+    the incoming ``data_ts`` is strictly newer — no insert, no eviction.
+
+    Inline formulation (``backend`` None/"fused"): one (N, R, W) gather per
+    probed field, then ONE scatter-max electing the winning row index per
+    cache line (``winr``), then dense per-line selects — no (N, R)-indexed
+    scatters, which XLA serializes element-wise on CPU.  The winner among
+    several qualifying rows for one line is the HIGHEST row index; every
+    shipped workload makes duplicate rows value-identical (same tick ⇒ same
+    ts, payloads pure in (key, ts) — ``workload.versioned_payload``), so the
+    tie-break is unobservable there.  ``backend`` "xla" | "interpret" |
+    "pallas" dispatches the sweep through ``repro.kernels.ops.flic_update``
+    (the ``kernels/flic_update.py`` Pallas kernel or its pure-jnp oracle,
+    same winner semantics) — selected by ``SimConfig.probe_backend`` /
+    ``REPRO_KERNELS`` exactly like the fog-probe kernel.
 
     ``delivered`` is (N, R) per-(hearer, row) delivery under the loss model;
     a row is always applied at its origin.  ``node_ids`` maps local cache
     lanes to global node ids (the distributed runtime passes the shard's).
 
-    Returns (caches, n_updates) — the number of in-place updates applied,
-    which the simulator reports as ``coherence_updates``.  On write-once
-    workloads this pass is a provable no-op and the fused engine skips it;
-    mutable workloads run it every tick.  The no-op claim holds up to 32-bit
-    tag collisions between rows resident at the same hearer (expected
-    colliding pairs ~ rows²/2³³ — ≪1 for every shipped test/benchmark
-    scale); a collision would make the engines diverge on that line only.  Rows sharing a key within one batch scatter identical values
-    (same ts, and payloads are pure functions of (key, ts) —
-    ``workload.versioned_payload``), so duplicate-index order is immaterial.
+    Returns (caches, n_updates) — the number of in-place updates applied
+    (counted per qualifying (hearer, row) pair against the PRE-sweep
+    timestamps, on every backend), which the simulator reports as
+    ``coherence_updates``.  On write-once workloads this pass is a provable
+    no-op and the fused engine skips it; mutable workloads run it every
+    tick.  The no-op claim holds up to 32-bit tag collisions between rows
+    resident at the same hearer (expected colliding pairs ~ rows²/2³³ —
+    ≪1 for every shipped test/benchmark scale); a collision would make the
+    engines diverge on that line only.
     """
     n = caches.tags.shape[0]
     if node_ids is None:
         node_ids = jnp.arange(n, dtype=jnp.int32)
     keys = jnp.asarray(rows.key, jnp.uint32)                            # (R,)
+    r = keys.shape[0]
     sidx = (keys % jnp.uint32(caches.num_sets)).astype(jnp.int32)       # (R,)
+    row_ts = jnp.asarray(rows.data_ts, jnp.int32)
 
     is_origin = jnp.asarray(rows.origin, jnp.int32)[None, :] == node_ids[:, None]
     live = jnp.asarray(rows.valid)[None, :] & (delivered | is_origin)   # (N, R)
 
+    if backend not in (None, "fused"):
+        return _update_rows_kernel(
+            caches, keys, sidx, row_ts, rows.data, live, now, backend
+        )
+
     set_tags = caches.tags[:, sidx]                                     # (N, R, W)
     set_valid = caches.valid[:, sidx]
     match = set_valid & (set_tags == keys[None, :, None])
-    newer = jnp.asarray(rows.data_ts, jnp.int32)[None, :, None] > caches.data_ts[:, sidx]
+    newer = row_ts[None, :, None] > caches.data_ts[:, sidx]
     upd = match & newer & live[:, :, None]                              # (N, R, W)
+    n_upd = jnp.sum(jnp.any(upd, axis=2).astype(jnp.int32))
 
-    ways = jnp.argmax(upd, axis=2)                                      # (N, R)
-    do = jnp.any(upd, axis=2)
-    s = jnp.where(do, sidx[None, :], caches.num_sets)                   # OOB drop
-    rows_n = jnp.arange(n)[:, None]
-    ts_nr = jnp.broadcast_to(jnp.asarray(rows.data_ts, jnp.int32)[None, :], (n, keys.shape[0]))
-
+    # Winning row per line: scatter-max of the row index along the shared
+    # set-index vector (R slice-updates vectorized over nodes), then dense
+    # gathers of the winners' values — never an (N, R)-indexed scatter.
+    ridx = jnp.arange(r, dtype=jnp.int32)
+    winr = jnp.full(caches.tags.shape, -1, jnp.int32).at[:, sidx].max(
+        jnp.where(upd, ridx[None, :, None], -1)
+    )
+    updated = winr >= 0                                                 # (N, S, W)
+    wsafe = jnp.maximum(winr, 0)
     caches = dataclasses.replace(
         caches,
-        data_ts=caches.data_ts.at[rows_n, s, ways].set(ts_nr, mode="drop"),
-        last_use=caches.last_use.at[rows_n, s, ways].set(
-            jnp.full_like(ts_nr, now), mode="drop"
-        ),
-        data=caches.data.at[rows_n, s, ways].set(
-            jnp.broadcast_to(rows.data[None], (n, *rows.data.shape)), mode="drop"
-        ),
+        data_ts=jnp.where(updated, row_ts[wsafe], caches.data_ts),
+        last_use=jnp.where(updated, jnp.asarray(now, jnp.int32), caches.last_use),
+        data=jnp.where(updated[..., None], rows.data[wsafe], caches.data),
     )
-    return caches, jnp.sum(do.astype(jnp.int32))
+    return caches, n_upd
+
+
+def _update_rows_kernel(
+    caches: CacheState, keys, sidx, row_ts, row_data, live, now, backend
+) -> tuple[CacheState, jax.Array]:
+    """Kernel-backed ``update_rows`` sweep via ``repro.kernels.ops``.
+
+    Pads the row axis to the kernel block, vmaps the per-cache kernel over
+    the node axis, and reassembles the cache pytree.  Padding rows carry
+    ``live=False`` so they can never apply.
+    """
+    from repro.kernels import ops
+
+    n = caches.tags.shape[0]
+    r = keys.shape[0]
+    rb = min(ops.FLIC_UPDATE_BLOCK, r)
+    pad = (-r) % rb
+    if pad:
+        keys = jnp.concatenate([keys, jnp.full((pad,), NULL_TAG)])
+        sidx = jnp.concatenate([sidx, jnp.zeros((pad,), jnp.int32)])
+        row_ts = jnp.concatenate([row_ts, jnp.full((pad,), -1, jnp.int32)])
+        row_data = jnp.concatenate(
+            [row_data, jnp.zeros((pad, row_data.shape[-1]), row_data.dtype)]
+        )
+        live = jnp.concatenate([live, jnp.zeros((n, pad), bool)], axis=1)
+    now_i = jnp.full((1,), jnp.asarray(now, jnp.int32))
+
+    def one_cache(tags, data_ts, valid, last_use, data, live_n):
+        return ops.flic_update(
+            tags, data_ts, valid, last_use, data,
+            keys.astype(jnp.int32), sidx, row_ts,
+            row_data, live_n, now_i, backend=backend,
+        )
+
+    new_ts, new_lu, new_data, cnt = jax.vmap(one_cache)(
+        caches.tags.astype(jnp.int32), caches.data_ts,
+        caches.valid, caches.last_use, caches.data, live,
+    )
+    caches = dataclasses.replace(
+        caches, data_ts=new_ts, last_use=new_lu, data=new_data
+    )
+    return caches, jnp.sum(cnt)
 
 
 def invalidate_nodes(caches: CacheState, node_mask: jax.Array) -> CacheState:

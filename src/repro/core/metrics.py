@@ -70,6 +70,40 @@ def accumulate(agg: TickMetrics, m: TickMetrics) -> TickMetrics:
     )
 
 
+def windowed_scan(step, state, ticks: int, metrics_every: int):
+    """``lax.scan`` a ``state -> (state, TickMetrics)`` step with thinning.
+
+    With ``metrics_every == 1`` this is a plain per-tick scan; otherwise one
+    ``accumulate``-aggregated row is emitted per ``metrics_every``-tick
+    window.  This is the ONE definition of the thinning semantics — the
+    single-host engines and the distributed runtime both scan through it,
+    so the windows cannot drift between engines (the bitwise conformance
+    contract, DESIGN.md §8).  Must be called under jit with static ``ticks``
+    / ``metrics_every``.
+    """
+    if metrics_every == 1:
+        return jax.lax.scan(lambda s, _: step(s), state, None, length=ticks)
+    if ticks % metrics_every != 0:
+        raise ValueError(
+            f"metrics thinning aggregates fixed windows: ticks ({ticks}) "
+            f"must be divisible by metrics_every ({metrics_every})"
+        )
+
+    def window(state, _):
+        def inner(carry, _):
+            s, agg = carry
+            s, mm = step(s)
+            return (s, accumulate(agg, mm)), None
+
+        (state, agg), _ = jax.lax.scan(
+            inner, (state, TickMetrics.zeros(ticks=0)), None,
+            length=metrics_every,
+        )
+        return state, agg
+
+    return jax.lax.scan(window, state, None, length=ticks // metrics_every)
+
+
 def summarize(series: TickMetrics) -> dict:
     """Aggregate a stacked TickMetrics time-series into headline numbers."""
     tot = jax.tree.map(lambda x: jnp.sum(x, axis=0), series)

@@ -63,7 +63,7 @@ from repro.core import writeback as wb
 from repro.core.cache_state import NULL_TAG, CacheLine, CacheState, empty_cache
 from repro.core.coherence import GilbertElliott, bernoulli_loss_mask, gilbert_elliott_step
 from repro.core.flic import insert_rows, invalidate_nodes, update_rows
-from repro.core.metrics import TickMetrics, accumulate
+from repro.core.metrics import TickMetrics, windowed_scan
 from repro.utils.hashing import hash2_u32
 
 # Payload derivation lives in the workload layer now; keep the old name —
@@ -412,8 +412,12 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
         caches, _ev = insert_rows(caches, rows, t)
         if spec.mutable:
             # The scenario can re-write keys: run the LIVE batched coherence
-            # sweep (hearers update resident older copies in place).
-            caches, n_coh = update_rows(caches, rows, delivered, t)
+            # sweep (hearers update resident older copies in place).  The
+            # sweep dispatches through the same kernel-backend knob as the
+            # fog probe (inline winr election, or kernels.ops.flic_update).
+            caches, n_coh = update_rows(
+                caches, rows, delivered, t, backend=cfg.probe_backend
+            )
         # else: write-once keys — the sweep is a provable no-op and is
         # skipped (see flic.update_rows; equivalence is asserted against the
         # reference engine which still runs it).
@@ -482,14 +486,18 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
     best_payload_slot = payload_of(best_c, slots)                  # (R, D)
 
     # LRU refresh in ONE scatter: the reader's local hit plus every
-    # responder that served a query.
+    # responder that served a query.  The scatter-max runs along the SHARED
+    # query set-index vector (R slice-updates, each vectorized over all C
+    # caches) with the per-cache way variability moved into the VALUES —
+    # XLA serializes per-element (C, R)-indexed scatters on CPU.
     touch_cq = hit_fog_cq.at[r_gidx, slots].max(hit_local_slot)
-    s_touch = jnp.where(touch_cq, sidx_q[None, :], cfg.cache_sets)
+    touch_w = touch_cq[:, :, None] & (
+        jax.lax.iota(jnp.int32, cfg.cache_ways)[None, None, :]
+        == way_cq[:, :, None]
+    )
     caches = dataclasses.replace(
         caches,
-        last_use=caches.last_use.at[
-            jnp.arange(n)[:, None], s_touch, way_cq
-        ].max(t, mode="drop"),
+        last_use=caches.last_use.at[:, sidx_q].max(jnp.where(touch_w, t, -1)),
     )
 
     n_fog_queries = jnp.sum(need_fog_slot.astype(jnp.int32))
@@ -658,27 +666,7 @@ def _tick_fn(engine: str):
 def _run_scan(cfg: SimConfig, ticks: int, state: SimState,
               metrics_every: int, engine: str):
     tick = _tick_fn(engine)
-    if metrics_every == 1:
-        return jax.lax.scan(lambda s, x: tick(cfg, s, x), state, None, length=ticks)
-
-    if ticks % metrics_every != 0:
-        raise ValueError(
-            f"ticks ({ticks}) must be a multiple of metrics_every ({metrics_every})"
-        )
-
-    def window(state, _):
-        def inner(carry, _):
-            s, agg = carry
-            s, mm = tick(cfg, s)
-            return (s, accumulate(agg, mm)), None
-
-        (state, agg), _ = jax.lax.scan(
-            inner, (state, TickMetrics.zeros(ticks=0)), None,
-            length=metrics_every,
-        )
-        return state, agg
-
-    return jax.lax.scan(window, state, None, length=ticks // metrics_every)
+    return windowed_scan(lambda s: tick(cfg, s), state, ticks, metrics_every)
 
 
 def run_sim(
@@ -714,16 +702,25 @@ def run_any_engine(
     Every engine returns ``(final_state, TickMetrics series)`` with the same
     series shape; ``tests/conformance.py`` asserts the series (and therefore
     the summarized metrics) are bit-identical across all three for every
-    scenario × seed × outage schedule.
+    scenario × seed × outage schedule.  ``metrics_every`` thinning is
+    supported by EVERY engine (the distributed scan aggregates the same
+    fixed windows per shard) under the same constraint: ``ticks`` must be
+    divisible by the window.
     """
+    if metrics_every != 1 and ticks % metrics_every != 0:
+        raise ValueError(
+            f"metrics thinning aggregates fixed windows on every engine "
+            f"(including distributed): ticks ({ticks}) must be divisible by "
+            f"metrics_every ({metrics_every})"
+        )
     if engine == "distributed":
-        if metrics_every != 1:
-            raise ValueError("metrics_every is a single-host engine knob")
         from repro.core.distributed import run_distributed_sim
 
         ndev = len(jax.devices())
         axis_type = getattr(jax.sharding, "AxisType", None)
         kw = dict(axis_types=(axis_type.Auto,)) if axis_type is not None else {}
         mesh = jax.make_mesh((ndev,), (axis,), **kw)
-        return run_distributed_sim(mesh, cfg, ticks, axis=axis, seed=seed)
+        return run_distributed_sim(
+            mesh, cfg, ticks, axis=axis, seed=seed, metrics_every=metrics_every
+        )
     return run_sim(cfg, ticks, seed=seed, engine=engine, metrics_every=metrics_every)

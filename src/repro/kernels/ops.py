@@ -20,6 +20,8 @@ from repro.kernels import ref
 from repro.kernels.flic_lookup import Q_BLOCK as FLIC_LOOKUP_BLOCK
 from repro.kernels.flic_lookup import flic_lookup_pallas
 from repro.kernels.flic_merge import flic_merge_pallas
+from repro.kernels.flic_update import R_BLOCK as FLIC_UPDATE_BLOCK
+from repro.kernels.flic_update import flic_update_pallas
 from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
@@ -39,6 +41,22 @@ def flic_lookup(tags, data_ts, valid, data, keys, sidx, backend: str | None = No
         return ref.flic_lookup_ref(tags, data_ts, valid, data, keys, sidx)
     return flic_lookup_pallas(
         tags, data_ts, valid, data, keys, sidx, interpret=(mode != "pallas")
+    )
+
+
+def flic_update(tags, data_ts, valid, last_use, data, keys, sidx, row_ts,
+                row_data, live, now, backend: str | None = None):
+    """One cache's coherence-update sweep; returns (data_ts, last_use, data,
+    n_updates) — see ref.flic_update_ref for the exact contract."""
+    mode = backend or _mode()
+    if mode == "xla":
+        return ref.flic_update_ref(
+            tags, data_ts, valid, last_use, data, keys, sidx, row_ts,
+            row_data, live, now,
+        )
+    return flic_update_pallas(
+        tags, data_ts, valid, last_use, data, keys, sidx, row_ts,
+        row_data, live, now, interpret=(mode != "pallas"),
     )
 
 

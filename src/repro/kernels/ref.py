@@ -43,6 +43,55 @@ def flic_lookup_ref(
 
 
 # ---------------------------------------------------------------------------
+# flic_update: coherence-update sweep of one cache shard
+# ---------------------------------------------------------------------------
+
+def flic_update_ref(
+    tags: jax.Array,      # (S, W) int32 (bitcast uint32 keys)
+    data_ts: jax.Array,   # (S, W) int32
+    valid: jax.Array,     # (S, W) bool
+    last_use: jax.Array,  # (S, W) int32
+    data: jax.Array,      # (S, W, D) f32
+    keys: jax.Array,      # (R,) int32 broadcast row keys
+    sidx: jax.Array,      # (R,) int32 precomputed set index
+    row_ts: jax.Array,    # (R,) int32 broadcast row timestamps
+    row_data: jax.Array,  # (R, D) f32 broadcast row payloads
+    live: jax.Array,      # (R,) bool — row delivered to (or originated at)
+    #                       this cache
+    now: jax.Array,       # (1,) int32 LRU stamp for applied updates
+):
+    """One cache's coherence sweep (``flic.update_rows`` semantics).
+
+    A live row updates a resident line in place iff the tags match, the line
+    is valid, and the row's timestamp is STRICTLY newer than the line's
+    PRE-sweep timestamp.  When several rows qualify for one line, the
+    HIGHEST row index wins (the ``winr`` election — in the simulator,
+    duplicate rows are value-identical so the tie-break is unobservable).
+    Returns (data_ts, last_use, data, n_updates) where ``n_updates`` counts
+    qualifying rows (not lines), each judged against the pre-sweep state.
+    """
+    r = keys.shape[0]
+    set_tags = tags[sidx]                                # (R, W)
+    match = valid[sidx] & (set_tags == keys[:, None])
+    newer = row_ts[:, None] > data_ts[sidx]
+    upd = match & newer & live[:, None]                  # (R, W)
+    n_upd = jnp.sum(jnp.any(upd, axis=1).astype(jnp.int32))
+
+    ridx = jnp.arange(r, dtype=jnp.int32)
+    winr = jnp.full(tags.shape, -1, jnp.int32).at[sidx].max(
+        jnp.where(upd, ridx[:, None], -1)
+    )
+    updated = winr >= 0
+    wsafe = jnp.maximum(winr, 0)
+    return (
+        jnp.where(updated, row_ts[wsafe], data_ts),
+        jnp.where(updated, now[0], last_use),
+        jnp.where(updated[..., None], row_data[wsafe], data),
+        n_upd,
+    )
+
+
+# ---------------------------------------------------------------------------
 # flic_merge: soft-coherence merge of two aligned cache shards
 # ---------------------------------------------------------------------------
 

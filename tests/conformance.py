@@ -57,14 +57,18 @@ class ConformanceCase:
     # ``summarize`` fields that must be strictly positive on every seed —
     # proof the exercised semantics are live, not vacuously identical.
     expect_positive: tuple[str, ...] = ("reads",)
+    # Metrics-thinning window (``run_any_engine(..., metrics_every=k)``) —
+    # every engine, including distributed, must aggregate the same windows.
+    metrics_every: int = 1
 
 
 def _case(spec: WorkloadSpec, ticks: int, expect: tuple[str, ...] = (), **cfg_kw):
+    metrics_every = cfg_kw.pop("metrics_every", 1)
     cfg = SimConfig(
         n_nodes=N_NODES, cache_lines=cfg_kw.pop("cache_lines", 64),
         loss_prob=cfg_kw.pop("loss_prob", 0.02), workload=spec, **cfg_kw,
     )
-    return ConformanceCase(cfg, ticks, ("reads",) + expect)
+    return ConformanceCase(cfg, ticks, ("reads",) + expect, metrics_every)
 
 
 _MUT = ("coherence_updates", "writes_coalesced")
@@ -99,6 +103,11 @@ CASES: dict[str, ConformanceCase] = {
         read_period=5, loss_prob=0.05, cache_lines=32,
         outage_schedule=((35, 40),),
     ),
+    # -- metrics thinning: one aggregated row per 5-tick window, all three
+    # engines (the distributed scan folds the same windows per shard) ------
+    "zipf_thinned": _case(
+        SCENARIOS["zipf"], 100, _MUT, metrics_every=5,
+    ),
     # -- loss-model / insert-policy variants --------------------------------
     "paper_ge": _case(
         SCENARIOS["paper"], 70, loss_model="gilbert_elliott",
@@ -122,7 +131,10 @@ def assert_series_identical(a, b, label: str = ""):
 def run_case(name: str, seed: int, engine: str):
     """Run one case on one engine; returns (final_state, TickMetrics series)."""
     case = CASES[name]
-    return run_any_engine(case.cfg, case.ticks, seed=seed, engine=engine)
+    return run_any_engine(
+        case.cfg, case.ticks, seed=seed, engine=engine,
+        metrics_every=case.metrics_every,
+    )
 
 
 def case_report(name: str, seed: int, engines=ENGINES) -> dict:

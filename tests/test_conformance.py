@@ -15,14 +15,16 @@ re-checks for defense in depth.
 """
 import json
 
+import numpy as np
 import pytest
 
-from conformance import CASES, ENGINES, SEEDS
+from conformance import CASES, ENGINES, SEEDS, assert_series_identical
 
 GROUPS = {
     "scenarios_a": ("paper", "zipf", "zipf_hot", "paper_ge"),
     "scenarios_b": ("bursty", "diurnal", "churn", "storm"),
-    "outages": ("paper_outage", "zipf_outage", "churn_outage", "paper_replicate"),
+    "outages": ("paper_outage", "zipf_outage", "churn_outage", "paper_replicate",
+                "zipf_thinned"),
 }
 
 
@@ -31,6 +33,53 @@ def test_groups_cover_every_case():
     preset added to conformance.CASES but not to a group)."""
     grouped = [name for g in GROUPS.values() for name in g]
     assert sorted(grouped) == sorted(CASES)
+
+
+def test_distributed_metrics_thinning_matches_thinned_reference():
+    """Fast tier, single device: the distributed engine's ``metrics_every``
+    windowing (inner scan per shard, ``metrics.accumulate`` per window)
+    must reproduce the thinned reference series bitwise; non-divisible
+    ticks raise the window-support error (not the old single-host-knob
+    message).  The full 8-device version rides the matrix as the
+    ``zipf_thinned`` case."""
+    from repro.core.simulator import run_any_engine
+
+    case = CASES["zipf_thinned"]
+    k = case.metrics_every
+    _, ref = run_any_engine(
+        case.cfg, case.ticks, seed=0, engine="reference", metrics_every=k
+    )
+    _, dist = run_any_engine(
+        case.cfg, case.ticks, seed=0, engine="distributed", metrics_every=k
+    )
+    assert np.asarray(dist.reads).shape[0] == case.ticks // k
+    assert_series_identical(ref, dist, "thinned reference vs distributed")
+    with pytest.raises(ValueError, match="divisible by metrics_every"):
+        run_any_engine(
+            case.cfg, case.ticks + 1, seed=0, engine="distributed",
+            metrics_every=k,
+        )
+
+
+@pytest.mark.parametrize(
+    "backend", ["xla", pytest.param("interpret", marks=pytest.mark.slow)]
+)
+def test_distributed_kernel_backend_matches_reference(backend):
+    """The distributed engine routes the live coherence sweep through the
+    same ``probe_backend`` kernel dispatch as the fused engine (inside
+    shard_map): series must stay bit-identical to the inline reference."""
+    import dataclasses
+
+    from repro.core.simulator import run_any_engine
+
+    case = CASES["zipf_hot"]
+    _, ref = run_any_engine(case.cfg, case.ticks, seed=0, engine="reference")
+    _, dist = run_any_engine(
+        dataclasses.replace(case.cfg, probe_backend=backend),
+        case.ticks, seed=0, engine="distributed",
+    )
+    assert_series_identical(ref, dist, f"reference vs distributed[{backend}]")
+    assert int(np.sum(np.asarray(dist.coherence_updates))) > 0
 
 
 @pytest.mark.slow

@@ -1,0 +1,164 @@
+"""The ``flic_update`` kernel contract: inline == oracle == Pallas kernel.
+
+``flic.update_rows`` has three executions of ONE deterministic semantics
+(DESIGN.md §3): the inline ``winr`` winner election, the pure-jnp oracle
+``kernels.ref.flic_update_ref``, and the Pallas kernel
+``kernels/flic_update.py`` (interpret mode on CPU).  The winner among
+several rows qualifying for one cache line is the HIGHEST row index, and
+every qualification (including the applied-update count) is judged against
+the PRE-sweep timestamps — so the contract is exact bit-identity across
+backends for ARBITRARY inputs, including key collisions, duplicate rows
+with divergent timestamps, partial delivery masks and origin loopback.
+
+The hypothesis sweep drives random (N, R, S, W, collisions) shapes through
+all three; fixed cases cover the block-padding path (R > R_BLOCK ⇒ padded
+rows must never apply) and shifted ``node_ids`` (the distributed runtime's
+shard lanes).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # the fixed-case tests below still run without it
+    HAVE_HYPOTHESIS = False
+
+    def given(**kw):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(**kw):
+        return lambda f: f
+
+    class _St:  # stands in for strategy constructors at decoration time
+        def __getattr__(self, name):
+            return lambda *a, **kw: None
+
+    st = _St()
+
+from repro.core.cache_state import CacheLine, empty_cache
+from repro.core.flic import update_rows
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+KERNEL_BACKENDS = ("xla", "interpret")
+
+
+def _random_state(rng, n, s, w, d, r, key_pool):
+    """A populated cache batch plus R broadcast rows over a small key pool
+    (small pool ⇒ frequent set collisions AND duplicate same-key rows)."""
+    caches = empty_cache(s, w, d, jnp.float32, batch=(n,))
+    tags = rng.choice(key_pool, (n, s, w)).astype(np.uint32)
+    caches = dataclasses.replace(
+        caches,
+        tags=jnp.asarray(tags),
+        data_ts=jnp.asarray(rng.integers(-1, 50, (n, s, w)), jnp.int32),
+        valid=jnp.asarray(rng.random((n, s, w)) < 0.7),
+        last_use=jnp.asarray(rng.integers(-1, 50, (n, s, w)), jnp.int32),
+        data=jnp.asarray(rng.standard_normal((n, s, w, d)), jnp.float32),
+    )
+    rows = CacheLine(
+        key=jnp.asarray(rng.choice(key_pool, (r,)), jnp.uint32),
+        data_ts=jnp.asarray(rng.integers(0, 80, (r,)), jnp.int32),
+        origin=jnp.asarray(rng.integers(0, n, (r,)), jnp.int32),
+        data=jnp.asarray(rng.standard_normal((r, d)), jnp.float32),
+        valid=jnp.asarray(rng.random(r) < 0.9),
+        dirty=jnp.zeros((r,), bool),
+    )
+    delivered = jnp.asarray(rng.random((n, r)) < 0.6)
+    return caches, rows, delivered
+
+
+def _assert_same_sweep(caches, rows, delivered, now, node_ids=None,
+                       backends=KERNEL_BACKENDS):
+    ref_c, ref_n = update_rows(caches, rows, delivered, now, node_ids=node_ids)
+    for be in backends:
+        ker_c, ker_n = update_rows(
+            caches, rows, delivered, now, node_ids=node_ids, backend=be
+        )
+        np.testing.assert_array_equal(np.asarray(ref_n), np.asarray(ker_n),
+                                      err_msg=f"{be}: n_updates")
+        for f in ("data_ts", "last_use", "data", "tags", "valid"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref_c, f)), np.asarray(getattr(ker_c, f)),
+                err_msg=f"{be}: caches.{f}",
+            )
+    return ref_n
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**16),
+    n=st.integers(1, 6),
+    s=st.sampled_from([2, 4, 8]),
+    w=st.sampled_from([1, 2, 4]),
+    r=st.integers(1, 40),
+    pool=st.integers(3, 12),
+)
+def test_update_rows_kernel_matches_inline(seed, n, s, w, r, pool):
+    rng = np.random.default_rng(seed)
+    key_pool = rng.integers(0, 2**32, pool, dtype=np.uint32)
+    caches, rows, delivered = _random_state(rng, n, s, w, 4, r, key_pool)
+    _assert_same_sweep(caches, rows, delivered, jnp.int32(99))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), shift=st.integers(0, 32))
+def test_update_rows_kernel_matches_with_node_ids(seed, shift):
+    """Shifted global node ids (the distributed runtime's shard lanes):
+    origin loopback must key off node_ids, not lane position."""
+    rng = np.random.default_rng(seed)
+    key_pool = rng.integers(0, 2**32, 6, dtype=np.uint32)
+    caches, rows, delivered = _random_state(rng, 4, 4, 2, 4, 16, key_pool)
+    rows = dataclasses.replace(
+        rows, origin=jnp.asarray(rng.integers(shift, shift + 4, (16,)), jnp.int32)
+    )
+    node_ids = shift + jnp.arange(4, dtype=jnp.int32)
+    _assert_same_sweep(caches, rows, delivered, jnp.int32(99), node_ids=node_ids)
+
+
+def test_update_rows_kernel_padding_path():
+    """R above the kernel block (R_BLOCK=128): padded rows carry live=False
+    and must never apply — counts and tables stay bit-identical."""
+    rng = np.random.default_rng(3)  # a seed whose sweep applies updates
+    key_pool = rng.integers(0, 2**32, 64, dtype=np.uint32)
+    caches, rows, delivered = _random_state(rng, 3, 8, 2, 4, 130, key_pool)
+    n_upd = _assert_same_sweep(caches, rows, delivered, jnp.int32(99))
+    assert int(n_upd) > 0  # the sweep actually applied updates
+
+
+def test_update_rows_duplicate_rows_highest_index_wins():
+    """Two value-DIVERGENT rows for one resident key: both count (judged
+    against the pre-sweep timestamp) and the higher row index wins the
+    line, on every backend."""
+    caches = empty_cache(2, 2, 2, jnp.float32, batch=(1,))
+    key = jnp.uint32(11)  # set 1 of 2
+    caches = dataclasses.replace(
+        caches,
+        tags=caches.tags.at[0, 1, 0].set(key),
+        valid=caches.valid.at[0, 1, 0].set(True),
+        data_ts=caches.data_ts.at[0, 1, 0].set(5),
+    )
+    rows = CacheLine(
+        key=jnp.full((2,), key, jnp.uint32),
+        data_ts=jnp.asarray([9, 7], jnp.int32),   # both newer than 5
+        origin=jnp.asarray([-5, -5], jnp.int32),  # no loopback
+        data=jnp.asarray([[1.0, 1.0], [2.0, 2.0]], jnp.float32),
+        valid=jnp.ones((2,), bool),
+        dirty=jnp.zeros((2,), bool),
+    )
+    delivered = jnp.ones((1, 2), bool)
+    for be in (None,) + KERNEL_BACKENDS:
+        new_c, n_upd = update_rows(
+            caches, rows, delivered, jnp.int32(42), backend=be
+        )
+        assert int(n_upd) == 2, be                       # both qualified
+        assert int(new_c.data_ts[0, 1, 0]) == 7, be      # row 1 (highest) won
+        np.testing.assert_array_equal(
+            np.asarray(new_c.data[0, 1, 0]), [2.0, 2.0], err_msg=str(be)
+        )
+        assert int(new_c.last_use[0, 1, 0]) == 42, be

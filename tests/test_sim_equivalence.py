@@ -144,6 +144,27 @@ def test_kernel_probe_backend_matches_reference(backend):
     assert_series_identical(ref, ker)
 
 
+@pytest.mark.parametrize(
+    "backend", ["xla", pytest.param("interpret", marks=pytest.mark.slow)]
+)
+def test_kernel_backends_match_reference_on_mutable_scenario(backend):
+    """On mutable scenarios ``probe_backend`` ALSO routes the live coherence
+    sweep through ops.flic_update (kernel or oracle); the full engine must
+    stay bit-identical to the reference's inline sweep — including the
+    ``coherence_updates`` count, which every backend judges against the
+    pre-sweep timestamps."""
+    cfg = SimConfig(
+        n_nodes=8, cache_lines=32, loss_prob=0.02,
+        workload=WorkloadSpec(popularity="zipf", key_universe=256, zipf_alpha=1.2),
+    )
+    _, ref = run_sim(cfg, 60, seed=1, engine="reference")
+    _, ker = run_sim(
+        dataclasses.replace(cfg, probe_backend=backend), 60, seed=1
+    )
+    assert_series_identical(ref, ker)
+    assert summarize(ker)["coherence_updates"] > 0  # the sweep was live
+
+
 @pytest.mark.slow
 def test_metrics_every_preserves_summary():
     """Windowed metric thinning sums flows / keeps gauges, so the headline
