@@ -1,7 +1,9 @@
 """Per-scenario fog benchmark: the workload layer swept end to end.
 
-For every named ``workload.SCENARIOS`` preset this measures, on the fused
-engine at the paper's geometry:
+For every named ``workload.SCENARIOS`` preset — including the plan-stage
+axes ``poisson`` (padded Poisson write lanes), ``trace_ycsb`` (synthetic
+(T, N) trace replay) and ``stream_churn`` (cumulative-write-indexed stream
+durability) — this measures, on the fused engine at the paper's geometry:
 
 * ``read_miss_ratio`` — the paper's "<2%" claim, per scenario;
 * ``sync_store_request_ratio`` — the "<5% of requests" claim;

@@ -1,7 +1,7 @@
 """End-to-end driver: a city-scale fog deployment, the paper's own scenario.
 
 Run: ``PYTHONPATH=src python examples/cityscale_cache_sim.py [--nodes 100]
-[--scenario zipf]``
+[--scenario zipf] [--trace requests.npz]``
 
 Simulates a metropolitan sensor fleet (default 100 nodes, ~30 simulated
 minutes): every node logs one reading per second, shares it with the fog
@@ -12,17 +12,46 @@ Prints the paper's evaluation metrics plus a tick-by-tick outage trace.
 
 ``--scenario`` selects a workload preset (``repro.core.workload.SCENARIOS``):
 the paper's write-once stream (default), a mutable Zipf universe with live
-coherence updates and write coalescing, bursty/diurnal load curves, or
-rolling node churn.
+coherence updates and write coalescing, bursty/diurnal load curves, rolling
+node churn, Poisson write arrivals, or synthetic trace replay.  ``--trace``
+replays a recorded ``(T, N)`` request tensor instead: an ``.npz`` file with
+``key_ids`` and ``ops`` (0=write, 1=read) arrays, e.g. one written by
+``repro.core.workload.save_trace_npz``.
 """
 import argparse
 import dataclasses
 
 import jax
+import numpy as np
 
 from repro.core import SCENARIOS, SimConfig, summarize
 from repro.core import backing_store as bs
+from repro.core import workload as wl
 from repro.core.simulator import init_sim, sim_tick
+
+
+def _pick_workload(args, ticks: int) -> wl.WorkloadSpec:
+    if args.trace:
+        with np.load(args.trace) as data:
+            if "key_ids" not in data or data["key_ids"].size == 0:
+                raise SystemExit(
+                    f"--trace {args.trace}: expected a non-empty 'key_ids' "
+                    f"array of shape (T, N) (see workload.save_trace_npz)"
+                )
+            key_universe = int(data["key_ids"].max()) + 1
+        return wl.WorkloadSpec(
+            popularity="trace", key_universe=max(2, key_universe),
+            trace=wl.TraceSpec(source="npz", path=args.trace),
+        )
+    spec = SCENARIOS[args.scenario]
+    if spec.popularity == "trace" and spec.trace.source != "npz" \
+            and spec.trace.length < ticks:
+        # synthetic preset traces cover the benchmark length; stretch them
+        # to this run so validate_run's trace-length floor holds
+        spec = dataclasses.replace(
+            spec, trace=dataclasses.replace(spec.trace, length=ticks)
+        )
+    return spec
 
 
 def main() -> None:
@@ -34,17 +63,22 @@ def main() -> None:
     ap.add_argument("--outage-s", type=int, default=180)
     ap.add_argument("--scenario", choices=sorted(SCENARIOS), default="paper",
                     help="workload preset (see repro.core.workload.SCENARIOS)")
+    ap.add_argument("--trace", default=None, metavar="NPZ",
+                    help="replay a recorded (T, N) trace: npz file with "
+                         "'key_ids' and 'ops' arrays (overrides --scenario)")
     args = ap.parse_args()
 
+    ticks = args.minutes * 60
+    spec = _pick_workload(args, ticks)
     cfg = SimConfig(
         n_nodes=args.nodes,
         cache_lines=args.cache_lines,
         loss_model="gilbert_elliott",
         queue_capacity=65536,
         writer_max_per_tick=256,
-        workload=SCENARIOS[args.scenario],
+        workload=spec,
     )
-    ticks = args.minutes * 60
+    wl.validate_run(cfg, ticks)
     state = init_sim(cfg)
     step = jax.jit(lambda s: sim_tick(cfg, s))
 
@@ -67,7 +101,8 @@ def main() -> None:
 
     stacked = jax.tree.map(lambda *xs: jax.numpy.stack(xs), *series)
     s = summarize(stacked)
-    print(f"\n=== {args.minutes}-minute city-scale run — scenario '{args.scenario}' ===")
+    what = f"trace '{args.trace}'" if args.trace else f"scenario '{args.scenario}'"
+    print(f"\n=== {args.minutes}-minute city-scale run — {what} ===")
     keys = ["read_miss_ratio", "sync_store_request_ratio",
             "wan_reduction_vs_baseline", "wan_bytes_per_tick",
             "lan_bytes_per_tick", "writes_gen", "writes_drained",

@@ -12,8 +12,10 @@ code and a slow cloud backing store:
   reads, rate caps, failure windows / a well-behaved "db" profile);
 * ``simulator`` — the paper's Docker fog testbed as one vectorized
   ``lax.scan`` program;
-* ``workload`` — scenario layer (``WorkloadSpec``/``SCENARIOS``): key
-  popularity, read recency, rate modulation, node churn (DESIGN.md §7);
+* ``workload`` — scenario layer (``WorkloadSpec``/``SCENARIOS``) and the
+  plan/execute split (``plan_tick`` -> ``RequestPlan``): key popularity
+  (stream/zipf/trace replay), Poisson or cadence arrivals, read recency,
+  rate modulation, node churn (DESIGN.md §7);
 * ``distributed`` — the pod-scale embodiment under ``shard_map``.
 """
 from repro.core.cache_state import CacheLine, CacheState, empty_cache, null_line
@@ -42,11 +44,22 @@ from repro.core.simulator import (
     run_sim,
     sim_tick,
 )
-from repro.core.workload import SCENARIOS, WorkloadSpec
+from repro.core.workload import (
+    SCENARIOS,
+    PlanState,
+    RequestPlan,
+    TraceSpec,
+    WorkloadSpec,
+    plan_tick,
+)
 
 __all__ = [
     "SCENARIOS",
     "WorkloadSpec",
+    "TraceSpec",
+    "RequestPlan",
+    "PlanState",
+    "plan_tick",
     "update_rows",
     "invalidate_nodes",
     "CacheLine",

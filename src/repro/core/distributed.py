@@ -60,13 +60,9 @@ from repro.core.metrics import TickMetrics, windowed_scan
 from repro.core.simulator import (
     SimConfig,
     _delivery_mask,
-    _gen_rows,
-    _gen_writes_keyed,
     _insert_own_rows,
     _merge_replicate,
     _payload_for,
-    _read_draws,
-    _read_draws_keyed,
     _resolve_backstop,
     _resolve_backstop_keyed,
 )
@@ -86,6 +82,8 @@ class FogShardState:
     #                          schedule as the single-host engines
     latest_ts: jax.Array     # replicated (K,) int32 — newest write per key id
     #                          (mutable workloads; staleness ground truth)
+    plan: wl.PlanState       # replicated carried plan-stage state (the
+    #                          cumulative-write ring index, DESIGN.md §7)
 
 
 def init_fog_shard(cfg: SimConfig, n_local: int, seed: int = 0) -> FogShardState:
@@ -101,6 +99,7 @@ def init_fog_shard(cfg: SimConfig, n_local: int, seed: int = 0) -> FogShardState
         tick=jnp.int32(0),
         rng=jax.random.PRNGKey(seed),
         latest_ts=jnp.full((ku,), -1, jnp.int32),
+        plan=wl.init_plan_state(cfg),
     )
 
 
@@ -120,8 +119,9 @@ def fog_shard_tick(
     spec = cfg.workload
     t = state.tick
     node_ids = rank * n_local + jnp.arange(n_local, dtype=jnp.int32)
-    all_ids = jnp.arange(n, dtype=jnp.int32)
-    rng, k_loss, k_age, k_src, k_qloss, k_coll = jax.random.split(state.rng, 6)
+    # The plan stage, evaluated REPLICATED (replicated rng + plan state →
+    # identical plan on every device); the shard slices its lanes below.
+    plan = wl.plan_tick(cfg, state.plan, t, state.rng)
     m = TickMetrics.zeros()
     caches = state.caches
     latest_ts = state.latest_ts
@@ -134,67 +134,72 @@ def fog_shard_tick(
         return jax.lax.dynamic_slice_in_dim(xs, rank * n_local, n_local, 0)
 
     # ---- 0. churn: rejoining shard nodes cold-start ------------------------
+    online = plan.online
     if spec.has_churn:
-        online = wl.online_mask(spec, n, t)
-        rejoin = wl.rejoin_mask(spec, n, t)
-        caches = invalidate_nodes(caches, my(rejoin))
-        n_rejoin = jnp.sum(rejoin.astype(jnp.int32))
+        caches = invalidate_nodes(caches, my(plan.rejoin))
+        n_rejoin = jnp.sum(plan.rejoin.astype(jnp.int32))
         online_l = my(online)
     else:
-        online = jnp.ones((n,), bool)
         online_l = jnp.ones((n_local,), bool)
         n_rejoin = jnp.int32(0)
 
-    # ---- 1. generate one fresh row per active node (replicated draws) ------
-    if spec.mutable:
-        rows, w_kids, write_mask = _gen_writes_keyed(cfg, t, all_ids, k_loss, online)
-        n_writes = jnp.sum(write_mask.astype(jnp.int32))
-    else:
-        rows = _gen_rows(cfg, t, all_ids)
-        n_writes = jnp.int32(n)
+    # ---- 1. materialize the plan's write waves (replicated tensors) --------
+    rows_waves = [
+        wl.plan_write_rows(cfg, plan, p, t) for p in range(spec.plan_waves)
+    ]
+    n_writes = jnp.sum(plan.w_valid.astype(jnp.int32))
     m = dataclasses.replace(m, writes_gen=n_writes)
 
     # ---- 2. fog broadcast under the loss model; sharded cache merge --------
-    channel, delivered = _delivery_mask(cfg, state.channel, k_loss, (n, n))
+    channel, delivered = _delivery_mask(cfg, state.channel, plan.k_deliver, (n, n))
     if spec.has_churn:
         delivered = delivered & online[:, None]   # offline nodes hear nothing
-    rows_local: CacheLine = jax.tree.map(my, rows)
     if cfg.insert_policy == "directory":
-        caches = _insert_own_rows(caches, rows_local, t)
+        n_coh_l = jnp.int32(0)
+        for rows in rows_waves:
+            rows_local: CacheLine = jax.tree.map(my, rows)
+            caches = _insert_own_rows(caches, rows_local, t)
+            if spec.mutable:
+                # LIVE coherence sweep: all n broadcast rows against this
+                # shard's caches, delivery mask sliced to the local
+                # receivers.  Same kernel-backend dispatch as the fused
+                # engine (DESIGN.md §4).
+                caches, n_coh_p = update_rows(
+                    caches, rows, my(delivered), t, node_ids=node_ids,
+                    backend=cfg.probe_backend,
+                )
+                n_coh_l = n_coh_l + n_coh_p
         if spec.mutable:
-            # LIVE coherence sweep: all n broadcast rows against this shard's
-            # caches, delivery mask sliced to the local receivers.  Same
-            # kernel-backend dispatch as the fused engine (DESIGN.md §4).
-            caches, n_coh_l = update_rows(
-                caches, rows, my(delivered), t, node_ids=node_ids,
-                backend=cfg.probe_backend,
-            )
             n_coh = jax.lax.psum(n_coh_l, axis)
         else:
             n_coh = jnp.int32(0)   # write-once: provable no-op, skipped
     else:
-        caches = _merge_replicate(caches, rows, my(delivered), t, node_ids=node_ids)
+        for rows in rows_waves:
+            caches = _merge_replicate(
+                caches, rows, my(delivered), t, node_ids=node_ids
+            )
         n_coh = jnp.int32(0)
     lan = n_writes.astype(jnp.float32) * cfg.row_bytes
 
     # ---- 3. write-behind enqueue (replicated single writer) ----------------
+    queue = state.queue
     if spec.mutable:
-        queue, _acc = wb.enqueue_keyed(
-            state.queue, w_kids, rows.data_ts, rows.origin, write_mask
-        )
-        latest_ts = latest_ts.at[
-            jnp.where(write_mask, w_kids, spec.key_universe)
-        ].max(rows.data_ts, mode="drop")
+        for p, rows in enumerate(rows_waves):
+            queue, _acc = wb.enqueue_keyed(
+                queue, plan.w_kids[p], rows.data_ts, rows.origin, plan.w_valid[p]
+            )
+            latest_ts = latest_ts.at[
+                jnp.where(plan.w_valid[p], plan.w_kids[p], spec.key_universe)
+            ].max(rows.data_ts, mode="drop")
     else:
+        rows = rows_waves[0]
         queue, _acc = wb.enqueue(
-            state.queue, rows.key, rows.data_ts, rows.origin, jnp.ones((n,), bool)
+            queue, rows.key, rows.data_ts, rows.origin, plan.w_valid[0]
         )
 
-    # ---- 4. reads: replicated draws, sharded probes ------------------------
-    if spec.mutable:
-        reading, r_kids, r_keys = _read_draws_keyed(cfg, t, k_age, all_ids, online)
-    else:
-        reading, src, r_tick, r_keys = _read_draws(cfg, t, k_age, k_src, all_ids)
+    # ---- 4. reads: replicated plan lanes, sharded probes -------------------
+    reading = plan.reading
+    r_keys = plan.r_keys
 
     # 4a. local probe of this shard's readers (reference-engine semantics).
     r_keys_l = my(r_keys)
@@ -233,7 +238,7 @@ def fog_shard_tick(
     if cfg.loss_model != "none":
         # Replicated (reader, responder) response-loss draw — the single-host
         # engines' exact PRNG consumption — sliced to the local responders.
-        _, resp_mask = _delivery_mask(cfg, channel, k_qloss, (n, n))
+        _, resp_mask = _delivery_mask(cfg, channel, plan.k_resp, (n, n))
         hits_qc = hits_qc & my(jnp.transpose(resp_mask))              # (nl, n)
     if spec.has_churn:
         hits_qc = hits_qc & online_l[:, None]   # offline responders are silent
@@ -274,12 +279,11 @@ def fog_shard_tick(
     need_store = q_need & ~fog_hit_q
     if spec.mutable:
         queue_hit, store_read, failed, found, served_ts = _resolve_backstop_keyed(
-            queue, store_in, healthy, need_store, r_kids
+            queue, store_in, healthy, need_store, plan.r_kids
         )
     else:
-        enq_idx = r_tick * n + src  # FIFO enqueue order = (tick, node)
         queue_hit, store_read, failed, found, _ = _resolve_backstop(
-            queue, store_in, healthy, need_store, enq_idx
+            queue, store_in, healthy, need_store, plan.r_enq_idx
         )
     n_store_reads = jnp.sum(store_read.astype(jnp.int32))
     n_queue_hits = jnp.sum(queue_hit.astype(jnp.int32))
@@ -315,8 +319,8 @@ def fog_shard_tick(
     else:
         fill_lines = CacheLine(
             key=r_keys_l,
-            data_ts=jnp.where(fog_hit_l, win_ts_l, my(r_tick)),
-            origin=my(src),
+            data_ts=jnp.where(fog_hit_l, win_ts_l, my(plan.r_fill_ts)),
+            origin=my(plan.r_src),
             data=jnp.where(
                 fog_hit_l[:, None], win_data_l,
                 _payload_for(r_keys_l, cfg.payload_dim),
@@ -339,7 +343,7 @@ def fog_shard_tick(
             hit_local_l, ts_local_l,
             jnp.where(fog_hit_l, win_ts_l, served_ts_l),
         )
-        truth_l = latest_ts[jnp.clip(my(r_kids), 0, spec.key_universe - 1)]
+        truth_l = latest_ts[jnp.clip(my(plan.r_kids), 0, spec.key_universe - 1)]
         n_stale = jax.lax.psum(
             jnp.sum((served_l & (got_ts_l < truth_l)).astype(jnp.int32)), axis
         )
@@ -353,7 +357,7 @@ def fog_shard_tick(
         burst=cfg.store.api_burst,
         max_per_tick=cfg.writer_max_per_tick,
     )
-    store = bs.commit_writes(store, n_drained, n_calls, k_coll, cfg.store)
+    store = bs.commit_writes(store, n_drained, n_calls, plan.k_coll, cfg.store)
     if spec.mutable:
         d_kids, d_ts, d_live = wb.drained_entries(
             queue, n_drained, cfg.writer_max_per_tick
@@ -402,7 +406,8 @@ def fog_shard_tick(
     )
     new_state = FogShardState(
         caches=caches, queue=queue, store=store, channel=channel,
-        tick=t + 1, rng=rng, latest_ts=latest_ts,
+        tick=t + 1, rng=plan.rng_next, latest_ts=latest_ts,
+        plan=plan.state_next,
     )
     return new_state, metrics
 
@@ -436,6 +441,7 @@ def run_distributed_sim(
 
     ndev = mesh.shape[axis]
     assert cfg.n_nodes % ndev == 0, "n_nodes must divide the fog axis"
+    wl.validate_run(cfg, ticks)
     if ticks % metrics_every != 0:
         # fail before device_put/compile; windowed_scan re-checks under jit
         raise ValueError(
@@ -455,6 +461,7 @@ def run_distributed_sim(
         tick=repl,
         rng=repl,
         latest_ts=repl,
+        plan=jax.tree.map(lambda _: repl, state.plan),
     )
 
     @partial(

@@ -33,20 +33,27 @@ alternative scenarios from ``repro.core.workload`` (DESIGN.md §7):
   already-drained rows that remain physically resident in its ring, and
   synchronous store reads are not attempted (the store is unreachable).
 
-This module holds the FUSED engine (DESIGN.md §3): one batched probe serves
-the local-hit check, the fog broadcast query, and the responder LRU-touch
-scatter; inserts are the batched ``insert_rows`` primitive; the per-tick
-coherence-update pass is skipped when workload keys are write-once and runs
-as the batched ``flic.update_rows`` sweep when the scenario can re-write
+Workload generation is NOT in this module: every engine consumes the same
+per-tick ``RequestPlan`` from ``workload.plan_tick`` (the plan/execute
+split, DESIGN.md §7) — writes and reads arrive as fixed-shape padded
+tensors (keys, validity masks, rejoin/online masks, durability indices),
+and the engines only *execute* them.  This module holds the FUSED engine
+(DESIGN.md §3): one batched probe serves the local-hit check, the fog
+broadcast query, and the responder LRU-touch scatter; inserts are the
+batched ``insert_rows`` primitive; the per-tick coherence-update pass is
+skipped when workload keys are write-once and runs as the batched
+``flic.update_rows`` sweep when the scenario can re-write
 (``WorkloadSpec.mutable``).  Mutable scenarios also swap the FIFO-index
 durability arithmetic for the keyed versioned-membership model
 (``_resolve_backstop_keyed`` / ``backing_store.table_ts``) with
-load-store-buffer coalescing in the writer's ring (``wb.enqueue_keyed``).
-The reference engine in ``simulator_ref.py`` retains the seed's per-pass
-structure, and ``tests/test_sim_equivalence.py`` proves both emit identical
-metrics on every scenario.  The function is pure; everything (losses,
-outages, workload) is driven by a single PRNG key, so runs are exactly
-reproducible.
+load-store-buffer coalescing in the writer's ring (``wb.enqueue_keyed``);
+stream scenarios with churn/rate modulation use the plan's carried
+cumulative-write ring index (``workload.PlanState``) instead of the closed
+form.  The reference engine in ``simulator_ref.py`` retains the seed's
+per-pass structure, and ``tests/test_sim_equivalence.py`` proves both emit
+identical metrics on every scenario.  The function is pure; everything
+(losses, outages, workload) is driven by a single PRNG key, so runs are
+exactly reproducible.
 """
 from __future__ import annotations
 
@@ -64,7 +71,6 @@ from repro.core.cache_state import NULL_TAG, CacheLine, CacheState, empty_cache
 from repro.core.coherence import GilbertElliott, bernoulli_loss_mask, gilbert_elliott_step
 from repro.core.flic import insert_rows, invalidate_nodes, update_rows
 from repro.core.metrics import TickMetrics, windowed_scan
-from repro.utils.hashing import hash2_u32
 
 # Payload derivation lives in the workload layer now; keep the old name —
 # the reference engine and distributed runtime import it from here.
@@ -121,8 +127,11 @@ class SimConfig:
 
     @property
     def readers_per_tick(self) -> int:
-        """Static bound on simultaneous readers (the staggered schedule
-        activates exactly the nodes ≡ -t (mod read_period))."""
+        """Static bound on simultaneous readers.  The staggered schedule
+        activates exactly the nodes ≡ -t (mod read_period); trace replay
+        can make any subset read, so its bound is N."""
+        if self.workload.popularity == "trace":
+            return self.n_nodes
         return -(-self.n_nodes // self.read_period)
 
 
@@ -138,6 +147,8 @@ class SimState:
     latest_ts: jax.Array        # (K,) int32 — newest write tick per key id
     #                             (mutable workloads; ground truth for the
     #                              staleness metric); (0,) for stream
+    plan: wl.PlanState          # carried plan-stage state (cumulative-write
+    #                             ring indexing; empty shapes when unused)
 
 
 def init_sim(cfg: SimConfig) -> SimState:
@@ -153,6 +164,7 @@ def init_sim(cfg: SimConfig) -> SimState:
         tick=jnp.int32(0),
         rng=jax.random.PRNGKey(cfg.seed),
         latest_ts=jnp.full((ku,), -1, jnp.int32),
+        plan=wl.init_plan_state(cfg),
     )
 
 
@@ -163,68 +175,6 @@ def _delivery_mask(cfg: SimConfig, channel, rng, shape):
         return channel, bernoulli_loss_mask(rng, shape, cfg.loss_prob)
     channel, mask = gilbert_elliott_step(channel, rng, shape)
     return channel, mask
-
-
-def _gen_rows(cfg: SimConfig, t: jax.Array, node_ids: jax.Array) -> CacheLine:
-    """One fresh row per node: key = hash(tick, node), payload from the key."""
-    n = cfg.n_nodes
-    keys = hash2_u32(jnp.full((n,), t, jnp.uint32), node_ids.astype(jnp.uint32))
-    return CacheLine(
-        key=keys,
-        data_ts=jnp.full((n,), t, jnp.int32),
-        origin=node_ids,
-        data=_payload_for(keys, cfg.payload_dim),
-        valid=jnp.ones((n,), bool),
-        dirty=jnp.zeros((n,), bool),  # write-through-behind: enqueued below
-    )
-
-
-def _read_draws(cfg: SimConfig, t, k_age, k_src, node_ids):
-    """The tick's read workload (same PRNG consumption on every engine)."""
-    n = cfg.n_nodes
-    reading = ((t + node_ids) % cfg.read_period == 0) & (t > 0)
-    window = jnp.minimum(jnp.int32(cfg.window_ticks), jnp.maximum(t, 1))
-    ages = jax.random.randint(k_age, (n,), 0, window, dtype=jnp.int32)
-    ages = jnp.minimum(ages, t)  # only existing data
-    src = jax.random.randint(k_src, (n,), 0, n, dtype=jnp.int32)
-    r_tick = t - ages
-    r_keys = hash2_u32(r_tick.astype(jnp.uint32), src.astype(jnp.uint32))
-    return reading, src, r_tick, r_keys
-
-
-# --------------------------------------------------------------------------
-# Mutable-workload (zipf) generation — shared by the fused and reference
-# engines so scenario semantics cannot drift between them.  (The distributed
-# runtime consumes the underlying ``workload`` helpers — masks, sampling,
-# payloads — but keeps its own shard-shaped generation and the simpler
-# direct-membership read path; see distributed.py.)
-# --------------------------------------------------------------------------
-
-def _gen_writes_keyed(cfg: SimConfig, t, node_ids, k_base, online):
-    """One zipf write per active node: returns (rows, key_ids, write_mask)."""
-    spec = cfg.workload
-    n = cfg.n_nodes
-    k_wr = jax.random.fold_in(k_base, 0x57A9)
-    kids = wl.sample_key_ids(spec, k_wr, (n,))
-    keys = wl.key_hash(kids)
-    write_mask = wl.rate_mask(spec, n, t) & online
-    ts = jnp.full((n,), t, jnp.int32)
-    rows = CacheLine(
-        key=keys,
-        data_ts=ts,
-        origin=node_ids,
-        data=wl.versioned_payload(keys, ts, cfg.payload_dim),
-        valid=write_mask,
-        dirty=jnp.zeros((n,), bool),
-    )
-    return rows, kids, write_mask
-
-
-def _read_draws_keyed(cfg: SimConfig, t, k_age, node_ids, online):
-    """Zipf-popularity reads on the staggered schedule (churn-masked)."""
-    reading = ((t + node_ids) % cfg.read_period == 0) & (t > 0) & online
-    kids = wl.sample_key_ids(cfg.workload, k_age, (cfg.n_nodes,))
-    return reading, kids, wl.key_hash(kids)
 
 
 def _resolve_backstop(queue: wb.WriteQueue, store: bs.StoreState,
@@ -373,9 +323,11 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
     n = cfg.n_nodes
     spec = cfg.workload
     t = state.tick
-    rng, k_loss, k_age, k_src, k_qloss, k_coll = jax.random.split(state.rng, 6)
+    # The plan stage: ALL request generation (writes, reads, masks, slots,
+    # the tick's PRNG split) happens in workload.plan_tick; this engine only
+    # executes the returned tensors.
+    plan = wl.plan_tick(cfg, state.plan, t, state.rng)
     m = TickMetrics.zeros()
-    node_ids = jnp.arange(n, dtype=jnp.int32)
     caches = state.caches
     latest_ts = state.latest_ts
     store_in = state.store
@@ -383,79 +335,75 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
         store_in = bs.apply_outage_schedule(store_in, t, cfg.outage_schedule)
 
     # ---- 0. churn: rejoining nodes cold-start -----------------------------
+    online = plan.online
     if spec.has_churn:
-        online = wl.online_mask(spec, n, t)
-        rejoin = wl.rejoin_mask(spec, n, t)
-        caches = invalidate_nodes(caches, rejoin)
-        n_rejoin = jnp.sum(rejoin.astype(jnp.int32))
+        caches = invalidate_nodes(caches, plan.rejoin)
+        n_rejoin = jnp.sum(plan.rejoin.astype(jnp.int32))
     else:
-        online = jnp.ones((n,), bool)
         n_rejoin = jnp.int32(0)
 
-    # ---- 1. generate one fresh row per active node ------------------------
-    if spec.mutable:
-        rows, w_kids, write_mask = _gen_writes_keyed(cfg, t, node_ids, k_loss, online)
-        n_writes = jnp.sum(write_mask.astype(jnp.int32))
-    else:
-        rows = _gen_rows(cfg, t, node_ids)
-        write_mask = jnp.ones((n,), bool)
-        n_writes = jnp.int32(n)
+    # ---- 1. materialize the plan's write waves ----------------------------
+    rows_waves = [
+        wl.plan_write_rows(cfg, plan, p, t) for p in range(spec.plan_waves)
+    ]
+    n_writes = jnp.sum(plan.w_valid.astype(jnp.int32))
     m = dataclasses.replace(m, writes_gen=n_writes)
 
     # ---- 2. fog broadcast under the loss model ----------------------------
-    channel, delivered = _delivery_mask(cfg, state.channel, k_loss, (n, n))
+    channel, delivered = _delivery_mask(cfg, state.channel, plan.k_deliver, (n, n))
     if spec.has_churn:
         delivered = delivered & online[:, None]  # offline nodes hear nothing
     n_coh = jnp.int32(0)
     if cfg.insert_policy == "directory":
-        # Origin-resident payload via ONE batched upsert.
-        caches, _ev = insert_rows(caches, rows, t)
-        if spec.mutable:
-            # The scenario can re-write keys: run the LIVE batched coherence
-            # sweep (hearers update resident older copies in place).  The
-            # sweep dispatches through the same kernel-backend knob as the
-            # fog probe (inline winr election, or kernels.ops.flic_update).
-            caches, n_coh = update_rows(
-                caches, rows, delivered, t, backend=cfg.probe_backend
-            )
-        # else: write-once keys — the sweep is a provable no-op and is
-        # skipped (see flic.update_rows; equivalence is asserted against the
-        # reference engine which still runs it).
+        for rows in rows_waves:
+            # Origin-resident payload via ONE batched upsert per wave.
+            caches, _ev = insert_rows(caches, rows, t)
+            if spec.mutable:
+                # The scenario can re-write keys: run the LIVE batched
+                # coherence sweep (hearers update resident older copies in
+                # place).  The sweep dispatches through the same
+                # kernel-backend knob as the fog probe (inline winr
+                # election, or kernels.ops.flic_update).
+                caches, n_coh_p = update_rows(
+                    caches, rows, delivered, t, backend=cfg.probe_backend
+                )
+                n_coh = n_coh + n_coh_p
+            # else: write-once keys — the sweep is a provable no-op and is
+            # skipped (see flic.update_rows; equivalence is asserted against
+            # the reference engine which still runs it).
     else:
-        caches = _merge_replicate(caches, rows, delivered, t)
+        for rows in rows_waves:
+            caches = _merge_replicate(caches, rows, delivered, t)
     lan = n_writes.astype(jnp.float32) * cfg.row_bytes  # broadcasts on the medium
 
     # ---- 3. write-behind enqueue (single writer, §I.A.b) ------------------
+    queue = state.queue
     if spec.mutable:
-        queue, _acc = wb.enqueue_keyed(
-            state.queue, w_kids, rows.data_ts, rows.origin, write_mask
-        )
-        latest_ts = latest_ts.at[
-            jnp.where(write_mask, w_kids, spec.key_universe)
-        ].max(rows.data_ts, mode="drop")
+        for p, rows in enumerate(rows_waves):
+            queue, _acc = wb.enqueue_keyed(
+                queue, plan.w_kids[p], rows.data_ts, rows.origin, plan.w_valid[p]
+            )
+            latest_ts = latest_ts.at[
+                jnp.where(plan.w_valid[p], plan.w_kids[p], spec.key_universe)
+            ].max(rows.data_ts, mode="drop")
     else:
+        rows = rows_waves[0]
         queue, _acc = wb.enqueue(
-            state.queue, rows.key, rows.data_ts, rows.origin, jnp.ones((n,), bool)
+            queue, rows.key, rows.data_ts, rows.origin, plan.w_valid[0]
         )
 
-    # ---- 4. reads: staggered, one per node per read_period ----------------
-    if spec.mutable:
-        reading, r_kids, r_keys = _read_draws_keyed(cfg, t, k_age, node_ids, online)
-    else:
-        reading, src, r_tick, r_keys = _read_draws(cfg, t, k_age, k_src, node_ids)
+    # ---- 4. reads: execute the plan's read lanes --------------------------
+    reading = plan.reading
+    r_keys = plan.r_keys
 
-    # Reader compaction: the stagger activates exactly the nodes with
-    # node ≡ -t (mod read_period), so the tick's readers are an arithmetic
-    # progression of static length R = ceil(N / read_period).  The fused
-    # probe touches (C, R, W) instead of the seed's (C, N, W).
-    p = cfg.read_period
-    r_slots = cfg.readers_per_tick
-    first = jnp.mod(-t, p).astype(jnp.int32)
-    r_ids = first + p * jnp.arange(r_slots, dtype=jnp.int32)       # (R,)
-    slot_ok = (r_ids < n) & (t > 0)
-    r_gidx = jnp.minimum(r_ids, n - 1)                             # safe gather
-    if spec.has_churn:
-        slot_ok = slot_ok & online[r_gidx]                         # offline: no read
+    # Reader compaction: the plan's (R,) slot tensors (for the staggered
+    # schedule, the arithmetic progression node ≡ -t (mod read_period) with
+    # static R = ceil(N / read_period); for trace replay, R = N).  The
+    # fused probe touches (C, R, W) instead of the seed's (C, N, W).
+    r_slots = plan.slot_ok.shape[0]
+    r_ids = plan.slot_id                                           # (R,)
+    slot_ok = plan.slot_ok
+    r_gidx = plan.slot_nid                                         # safe gather
     keys_q = r_keys[r_gidx]
     sidx_q = (keys_q % jnp.uint32(cfg.cache_sets)).astype(jnp.int32)
 
@@ -473,7 +421,7 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
     # are consumed.
     hit_fog_cq = hit_cq
     if cfg.loss_model != "none":
-        _, resp_mask = _delivery_mask(cfg, channel, k_qloss, (n, n))
+        _, resp_mask = _delivery_mask(cfg, channel, plan.k_resp, (n, n))
         hit_fog_cq = hit_fog_cq & resp_mask[r_gidx, :].T           # (C, R)
     if spec.has_churn:
         hit_fog_cq = hit_fog_cq & online[:, None]                  # silent offline
@@ -507,13 +455,13 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
     healthy = bs.store_healthy(store_in, t)
     need_store_slot = need_fog_slot & ~fog_hit_slot
     if spec.mutable:
-        kids_q = r_kids[r_gidx]
+        kids_q = plan.r_kids[r_gidx]
         (queue_hit_slot, store_read_slot, failed_slot, found_slot,
          served_ts_slot) = _resolve_backstop_keyed(
             queue, store_in, healthy, need_store_slot, kids_q
         )
     else:
-        enq_idx_slot = r_tick[r_gidx] * n + src[r_gidx]
+        enq_idx_slot = plan.r_enq_idx[r_gidx]
         queue_hit_slot, store_read_slot, failed_slot, found_slot, _ = _resolve_backstop(
             queue, store_in, healthy, need_store_slot, enq_idx_slot
         )
@@ -551,10 +499,11 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
             fog_hit_slot[:, None], best_payload_slot,
             _payload_for(keys_q, cfg.payload_dim),                 # (R, D)
         )
-        fill_ts = r_tick.at[r_ids].set(
-            jnp.where(fog_hit_slot, best_ts_slot, r_tick[r_gidx]), mode="drop"
+        fill_ts = plan.r_fill_ts.at[r_ids].set(
+            jnp.where(fog_hit_slot, best_ts_slot, plan.r_fill_ts[r_gidx]),
+            mode="drop",
         )
-        fill_origin = src
+        fill_origin = plan.r_src
     fill_data = jnp.zeros((n, cfg.payload_dim), jnp.float32).at[r_ids].set(
         slot_payload, mode="drop"
     )
@@ -589,7 +538,7 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
         burst=cfg.store.api_burst,
         max_per_tick=cfg.writer_max_per_tick,
     )
-    store = bs.commit_writes(store, n_drained, n_calls, k_coll, cfg.store)
+    store = bs.commit_writes(store, n_drained, n_calls, plan.k_coll, cfg.store)
     if spec.mutable:
         d_kids, d_ts, d_live = wb.drained_entries(
             queue, n_drained, cfg.writer_max_per_tick
@@ -643,7 +592,8 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
     )
     new_state = SimState(
         caches=caches, queue=queue, store=store, channel=channel,
-        tick=t + 1, rng=rng, latest_ts=latest_ts,
+        tick=t + 1, rng=plan.rng_next, latest_ts=latest_ts,
+        plan=plan.state_next,
     )
     return new_state, metrics
 
@@ -684,6 +634,7 @@ def run_sim(
     without changing what ``summarize`` reports.  The scan carry is donated,
     so state buffers are reused in place across calls.
     """
+    wl.validate_run(cfg, ticks)
     state = init_sim(dataclasses.replace(cfg, seed=seed))
     return _run_scan(cfg, ticks, state, metrics_every, engine)
 

@@ -14,11 +14,11 @@ than an assumption).  It exists for two reasons:
   strictly-newer timestamp wins) — across every ``WorkloadSpec`` scenario;
 * ``benchmarks/sim_bench.py`` uses it as the old-path baseline.
 
-Scenario semantics (zipf popularity, rate modulation, churn, keyed
-durability, staleness) are routed through the SAME shared helpers as the
-fused engine (``workload.py``, ``_gen_writes_keyed``, ``_read_draws_keyed``,
-``_resolve_backstop_keyed``) so they cannot drift between engines.  Do not
-"optimize" this file.
+Workload generation is NOT here: like every engine, this one executes the
+shared per-tick ``RequestPlan`` from ``workload.plan_tick`` (the
+plan/execute split, DESIGN.md §7) — same PRNG schedule, same padded write
+waves, same read lanes and durability indices — so scenario semantics
+cannot drift between engines.  Do not "optimize" this file.
 """
 from __future__ import annotations
 
@@ -37,13 +37,9 @@ from repro.core.simulator import (
     SimConfig,
     SimState,
     _delivery_mask,
-    _gen_rows,
-    _gen_writes_keyed,
     _insert_own_rows,
     _merge_replicate,
     _payload_for,
-    _read_draws,
-    _read_draws_keyed,
     _resolve_backstop,
     _resolve_backstop_keyed,
 )
@@ -53,9 +49,8 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
     n = cfg.n_nodes
     spec = cfg.workload
     t = state.tick
-    rng, k_loss, k_age, k_src, k_qloss, k_coll = jax.random.split(state.rng, 6)
+    plan = wl.plan_tick(cfg, state.plan, t, state.rng)
     m = TickMetrics.zeros()
-    node_ids = jnp.arange(n, dtype=jnp.int32)
     caches = state.caches
     latest_ts = state.latest_ts
     store_in = state.store
@@ -63,57 +58,57 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
         store_in = bs.apply_outage_schedule(store_in, t, cfg.outage_schedule)
 
     # ---- 0. churn: rejoining nodes cold-start -----------------------------
+    online = plan.online
     if spec.has_churn:
-        online = wl.online_mask(spec, n, t)
-        rejoin = wl.rejoin_mask(spec, n, t)
-        caches = invalidate_nodes(caches, rejoin)
-        n_rejoin = jnp.sum(rejoin.astype(jnp.int32))
+        caches = invalidate_nodes(caches, plan.rejoin)
+        n_rejoin = jnp.sum(plan.rejoin.astype(jnp.int32))
     else:
-        online = jnp.ones((n,), bool)
         n_rejoin = jnp.int32(0)
 
-    # ---- 1. generate one fresh row per active node ------------------------
-    if spec.mutable:
-        rows, w_kids, write_mask = _gen_writes_keyed(cfg, t, node_ids, k_loss, online)
-        n_writes = jnp.sum(write_mask.astype(jnp.int32))
-    else:
-        rows = _gen_rows(cfg, t, node_ids)
-        write_mask = jnp.ones((n,), bool)
-        n_writes = jnp.int32(n)
+    # ---- 1. materialize the plan's write waves ----------------------------
+    rows_waves = [
+        wl.plan_write_rows(cfg, plan, p, t) for p in range(spec.plan_waves)
+    ]
+    n_writes = jnp.sum(plan.w_valid.astype(jnp.int32))
     m = dataclasses.replace(m, writes_gen=n_writes)
 
     # ---- 2. fog broadcast under the loss model ----------------------------
-    channel, delivered = _delivery_mask(cfg, state.channel, k_loss, (n, n))
+    channel, delivered = _delivery_mask(cfg, state.channel, plan.k_deliver, (n, n))
     if spec.has_churn:
         delivered = delivered & online[:, None]
     n_coh = jnp.int32(0)
     if cfg.insert_policy == "directory":
-        caches = _insert_own_rows(caches, rows, t)
-        # The seed's per-tick coherence sweep, ALWAYS run here (write-once
-        # workloads make it a counted no-op; mutable workloads make it live).
-        caches, n_coh = update_rows(caches, rows, delivered, t)
+        for rows in rows_waves:
+            caches = _insert_own_rows(caches, rows, t)
+            # The seed's per-tick coherence sweep, ALWAYS run here
+            # (write-once workloads make it a counted no-op; mutable
+            # workloads make it live).
+            caches, n_coh_p = update_rows(caches, rows, delivered, t)
+            n_coh = n_coh + n_coh_p
     else:
-        caches = _merge_replicate(caches, rows, delivered, t)
+        for rows in rows_waves:
+            caches = _merge_replicate(caches, rows, delivered, t)
     lan = n_writes.astype(jnp.float32) * cfg.row_bytes
 
     # ---- 3. write-behind enqueue (single writer, §I.A.b) ------------------
+    queue = state.queue
     if spec.mutable:
-        queue, _acc = wb.enqueue_keyed(
-            state.queue, w_kids, rows.data_ts, rows.origin, write_mask
-        )
-        latest_ts = latest_ts.at[
-            jnp.where(write_mask, w_kids, spec.key_universe)
-        ].max(rows.data_ts, mode="drop")
+        for p, rows in enumerate(rows_waves):
+            queue, _acc = wb.enqueue_keyed(
+                queue, plan.w_kids[p], rows.data_ts, rows.origin, plan.w_valid[p]
+            )
+            latest_ts = latest_ts.at[
+                jnp.where(plan.w_valid[p], plan.w_kids[p], spec.key_universe)
+            ].max(rows.data_ts, mode="drop")
     else:
+        rows = rows_waves[0]
         queue, _acc = wb.enqueue(
-            state.queue, rows.key, rows.data_ts, rows.origin, jnp.ones((n,), bool)
+            queue, rows.key, rows.data_ts, rows.origin, plan.w_valid[0]
         )
 
-    # ---- 4. reads: staggered, one per node per read_period ----------------
-    if spec.mutable:
-        reading, r_kids, r_keys = _read_draws_keyed(cfg, t, k_age, node_ids, online)
-    else:
-        reading, src, r_tick, r_keys = _read_draws(cfg, t, k_age, k_src, node_ids)
+    # ---- 4. reads: execute the plan's read lanes --------------------------
+    reading = plan.reading
+    r_keys = plan.r_keys
 
     # 4a. local probe (vectorized over nodes); LRU refreshed only for nodes
     # actually reading this tick.
@@ -151,7 +146,7 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
     ts_qc = ts_qc.T
     # Response loss: each responder's reply may be lost independently.
     if cfg.loss_model != "none":
-        _, resp_mask = _delivery_mask(cfg, channel, k_qloss, (n, n))
+        _, resp_mask = _delivery_mask(cfg, channel, plan.k_resp, (n, n))
         hits_qc = hits_qc & resp_mask
         ts_qc = jnp.where(hits_qc, ts_qc, -1)
     if spec.has_churn:
@@ -182,12 +177,11 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
     need_store = need_fog & ~fog_hit
     if spec.mutable:
         queue_hit, store_read, failed, found, served_ts = _resolve_backstop_keyed(
-            queue, store_in, healthy, need_store, r_kids
+            queue, store_in, healthy, need_store, plan.r_kids
         )
     else:
-        enq_idx = r_tick * n + src  # FIFO enqueue order = (tick, node)
         queue_hit, store_read, failed, found, _ = _resolve_backstop(
-            queue, store_in, healthy, need_store, enq_idx
+            queue, store_in, healthy, need_store, plan.r_enq_idx
         )
     n_store_reads = jnp.sum(store_read.astype(jnp.int32))
     n_queue_hits = jnp.sum(queue_hit.astype(jnp.int32))
@@ -219,8 +213,8 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
     else:
         fill_lines = CacheLine(
             key=r_keys,
-            data_ts=jnp.where(fog_hit, best_ts, r_tick),
-            origin=src,
+            data_ts=jnp.where(fog_hit, best_ts, plan.r_fill_ts),
+            origin=plan.r_src,
             data=jnp.where(fog_hit[:, None], best_payload, _payload_for(r_keys, cfg.payload_dim)),
             valid=fill_ok,
             dirty=jnp.zeros((n,), bool),
@@ -240,7 +234,7 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
         got_ts = jnp.where(
             hit_local, ts_local, jnp.where(fog_hit, best_ts, served_ts)
         )
-        truth = latest_ts[jnp.clip(r_kids, 0, spec.key_universe - 1)]
+        truth = latest_ts[jnp.clip(plan.r_kids, 0, spec.key_universe - 1)]
         n_stale = jnp.sum((served & (got_ts < truth)).astype(jnp.int32))
     else:
         n_stale = jnp.int32(0)
@@ -252,7 +246,7 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
         burst=cfg.store.api_burst,
         max_per_tick=cfg.writer_max_per_tick,
     )
-    store = bs.commit_writes(store, n_drained, n_calls, k_coll, cfg.store)
+    store = bs.commit_writes(store, n_drained, n_calls, plan.k_coll, cfg.store)
     if spec.mutable:
         d_kids, d_ts, d_live = wb.drained_entries(
             queue, n_drained, cfg.writer_max_per_tick
@@ -301,6 +295,7 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
     )
     new_state = SimState(
         caches=caches, queue=queue, store=store, channel=channel,
-        tick=t + 1, rng=rng, latest_ts=latest_ts,
+        tick=t + 1, rng=plan.rng_next, latest_ts=latest_ts,
+        plan=plan.state_next,
     )
     return new_state, metrics

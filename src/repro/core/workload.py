@@ -6,56 +6,146 @@ That workload has two special properties the engines exploit:
 
 * keys are **write-once**, so the per-tick coherence-update sweep is a
   provable no-op (the fused engine skips it, DESIGN.md §3);
-* the single FIFO writer makes durability of row ``(t, n)`` the integer test
-  ``t*N + n < drained_total``.
+* on the steady, churn-free cadence every (tick, node) cell is written, so
+  durability of row ``(t, n)`` is the integer test ``t*N + n <
+  drained_total``; under churn/modulation the plan stage instead carries a
+  cumulative-write counter that assigns each *actually generated* write its
+  ring index (see ``PlanState``).
 
-A ``WorkloadSpec`` generalizes the workload along four axes — the paper's
+A ``WorkloadSpec`` generalizes the workload along five axes — the paper's
 stream plus the standard caching-literature scenarios (cf. Icarus'
-Zipf-``alpha`` ``StationaryWorkload``):
+Zipf-``alpha`` ``StationaryWorkload`` / ``TraceDrivenWorkload`` /
+``YCSBWorkload``):
 
 * **popularity** — ``"stream"`` (the paper's write-once key-per-tick-per-node
-  stream) or ``"zipf"`` (truncated Zipf-``alpha`` over a bounded key universe;
+  stream), ``"zipf"`` (truncated Zipf-``alpha`` over a bounded key universe;
   keys are RE-written, which makes the coherence pass live and forces keyed
   versioned durability — see ``writeback.enqueue_keyed`` /
-  ``backing_store.commit_keyed_rows``);
+  ``backing_store.commit_keyed_rows``), or ``"trace"`` (replay of a
+  precomputed ``(T, N)`` key/op tensor — synthetic YCSB/Globetraff-style
+  generators or an ``.npz`` file, ``TraceSpec``);
+* **arrivals** — ``"cadence"`` (the paper's one write per node per tick) or
+  ``"poisson"``: per-node Poisson request counts materialized as
+  ``max_requests_per_tick`` padded write lanes with validity masks, so the
+  scan stays jit-compilable (Icarus models request processes the same way);
 * **read recency** — stream reads sample uniform ages over the directory
   window (the paper's model); zipf reads sample the same Zipf popularity
-  (read-what's-popular, Icarus-style);
+  (read-what's-popular, Icarus-style); trace reads replay the trace's reads;
 * **rate** — ``"steady"`` | ``"bursty"`` (duty-cycled write windows) |
   ``"diurnal"`` (a sinusoidally varying fraction of nodes is active);
 * **churn** — a deterministic rotating block of nodes leaves and rejoins;
   rejoining nodes COLD-START (their caches are invalidated) and re-enter the
   staggered read schedule.
 
-Rate modulation and churn require ``popularity="zipf"``: the stream
-workload's FIFO-index durability arithmetic is only exact when every (tick,
-node) cell is written, so mutable-universe scenarios carry the keyed model
-instead.  ``WorkloadSpec`` enforces this at construction.
-
-Everything here is a pure function of ``(spec, tick)`` plus an explicit PRNG
-key, shared verbatim by the fused engine, the reference engine and the
-distributed runtime so scenario semantics cannot drift between them.
+**The plan/execute split (DESIGN.md §7).** Per-tick request generation is a
+single engine-independent stage: ``plan_tick(cfg, plan_state, t, rng)``
+materializes the tick's writes and reads — keys, key ids, version stamps,
+validity masks, rejoin/online masks, reader-compaction slots, durability
+indices — as fixed-shape padded tensors (``RequestPlan``).  The fused,
+reference and distributed engines only *execute* a plan; the distributed
+runtime slices plan lanes by its shard's node ids.  For every spec that was
+expressible before the split the plan consumes the EXACT legacy PRNG
+schedule (``jax.random.split(rng, 6)``, same keys, same shapes), so
+unchanged scenarios stay bit-identical.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal
+import functools
+import math
+import os
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.cache_state import CacheLine
 from repro.utils.hashing import hash2_u32
 
 # Salt separating the zipf key-id hash domain from the stream (t, n) domain.
 KEY_SALT = 0x5A1FCA5E
+# Salt for the per-tick zipf/trace write-key draw (kept from the pre-plan
+# engines so the PRNG stream of existing scenarios is unchanged).
+WRITE_SALT = 0x57A9
+# Salt for the per-node Poisson arrival-count draw (new axis, new stream).
+POISSON_SALT = 0x9015
+# Trace op codes ((T, N) ``ops`` tensor values).
+OP_WRITE = 0
+OP_READ = 1
+# Durability-index sentinel: a read whose target row was never generated
+# (stream × churn/modulation).  Large enough to fail every ring/store
+# membership test in ``_resolve_backstop`` -> the read becomes a store read
+# that finds nothing (store_missing), like any read of a nonexistent row.
+NO_ROW = 2**30
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """Static description of a replayable ``(T, N)`` request trace.
+
+    ``source``:
+
+    * ``"ycsb"`` — YCSB-style synthetic trace: zipfian(``zipf_alpha``) key
+      choice over the spec's ``key_universe``, i.i.d. read/write mix with
+      ``read_fraction`` reads (0.5 ≈ workload A, 0.95 ≈ workload B);
+    * ``"globetraff"`` — Globetraff-style mixed traffic: a ``p2p_fraction``
+      share of uniform-popularity P2P requests blended with zipfian web
+      requests, same read/write mix;
+    * ``"npz"`` — load ``path``: arrays ``key_ids`` and ``ops`` of shape
+      ``(T, N)`` (int, ops in {0=write, 1=read}), validated on load.
+
+    Synthetic traces are materialized host-side from ``numpy`` with
+    ``seed`` (deterministic, memoized per ``(spec, n)``).
+    """
+
+    source: Literal["ycsb", "globetraff", "npz"] = "ycsb"
+    length: int = 512            # T ticks covered (npz: taken from the file)
+    read_fraction: float = 0.5   # share of trace ops that are reads
+    zipf_alpha: float = 0.99     # skew of the zipfian component
+    p2p_fraction: float = 0.3    # globetraff: uniform-popularity share
+    path: str = ""               # npz source file
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.source == "npz":
+            if not self.path:
+                raise ValueError(
+                    "TraceSpec(source='npz') needs path=<file.npz> holding "
+                    "'key_ids' and 'ops' arrays of shape (T, N)"
+                )
+        elif self.length < 1:
+            raise ValueError(
+                f"TraceSpec.length must be >= 1 (got {self.length}): it is "
+                "the number of ticks the synthetic trace covers"
+            )
+        if not (0.0 <= self.read_fraction <= 1.0):
+            raise ValueError(
+                f"TraceSpec.read_fraction must be in [0, 1] (got "
+                f"{self.read_fraction})"
+            )
+        if not (0.0 <= self.p2p_fraction <= 1.0):
+            raise ValueError(
+                f"TraceSpec.p2p_fraction must be in [0, 1] (got "
+                f"{self.p2p_fraction})"
+            )
+
+
+def _poisson_truncation_prob(lam: float, lanes: int) -> float:
+    """P[X > lanes] for X ~ Poisson(lam) — the probability that a node's
+    per-tick arrival count overflows the static lane bound (and is
+    therefore truncated to ``lanes`` that tick)."""
+    return 1.0 - sum(
+        math.exp(-lam) * lam**k / math.factorial(k) for k in range(lanes + 1)
+    )
 
 
 @dataclasses.dataclass(frozen=True)
 class WorkloadSpec:
     """Static description of one scenario (hashable: jit-static on SimConfig)."""
 
-    popularity: Literal["stream", "zipf"] = "stream"
-    key_universe: int = 4096         # zipf: bounded key space |K|
+    popularity: Literal["stream", "zipf", "trace"] = "stream"
+    key_universe: int = 4096         # zipf/trace: bounded key space |K|
     zipf_alpha: float = 0.9          # zipf: skew (Icarus' alpha)
     rate: Literal["steady", "bursty", "diurnal"] = "steady"
     rate_period: int = 60            # bursty/diurnal modulation period (ticks)
@@ -63,27 +153,87 @@ class WorkloadSpec:
     rate_floor: float = 0.25         # diurnal: minimum active-node fraction
     churn_period: int = 0            # ticks per churn epoch; 0 = no churn
     churn_fraction: float = 0.2      # fraction of nodes offline each epoch
+    arrivals: Literal["cadence", "poisson"] = "cadence"
+    poisson_rate: float = 1.0        # poisson: mean write requests / node / tick
+    max_requests_per_tick: int = 1   # poisson: static padded lane count P
+    trace: Optional[TraceSpec] = None  # popularity="trace": what to replay
 
     def __post_init__(self):
-        if self.popularity == "stream" and (self.rate != "steady" or self.churn_period > 0):
+        if self.popularity == "trace":
+            if self.trace is None:
+                raise ValueError(
+                    "popularity='trace' needs a TraceSpec: "
+                    "WorkloadSpec(popularity='trace', trace=TraceSpec(...)) — "
+                    "synthetic 'ycsb'/'globetraff' generators or an 'npz' file"
+                )
+        elif self.trace is not None:
             raise ValueError(
-                "rate modulation / churn require popularity='zipf': the "
-                "write-once stream's FIFO-index durability is only exact when "
-                "every (tick, node) cell is written (see module docstring)"
+                f"trace=TraceSpec(...) is only meaningful with "
+                f"popularity='trace' (got popularity={self.popularity!r})"
             )
-        if self.popularity == "zipf" and self.key_universe < 2:
-            raise ValueError("zipf key_universe must be >= 2")
+        if self.mutable and self.key_universe < 2:
+            raise ValueError("zipf/trace key_universe must be >= 2")
+        if self.arrivals == "poisson":
+            if self.popularity != "zipf":
+                raise ValueError(
+                    "arrivals='poisson' requires popularity='zipf': Poisson "
+                    "lanes sample i.i.d. keys per request, while the stream's "
+                    "one-key-per-(tick, node) identity and a trace's fixed "
+                    "(T, N) schedule both pin the per-tick request count"
+                )
+            if not self.poisson_rate > 0.0:
+                raise ValueError(
+                    f"poisson_rate must be > 0 (got {self.poisson_rate}): it "
+                    "is the mean write-request count per node per tick"
+                )
+        if self.max_requests_per_tick < 1:
+            raise ValueError(
+                f"max_requests_per_tick must be >= 1 (got "
+                f"{self.max_requests_per_tick}): it is the static padded "
+                "write-lane count of the per-tick RequestPlan"
+            )
+        if self.arrivals == "poisson":
+            # Arrivals beyond the static lane bound are truncated; refuse
+            # specs where that silently biases the realized rate.
+            p_trunc = _poisson_truncation_prob(
+                self.poisson_rate, self.max_requests_per_tick
+            )
+            if p_trunc > 0.05:
+                need = self.max_requests_per_tick
+                while _poisson_truncation_prob(self.poisson_rate, need) > 0.05:
+                    need += 1
+                raise ValueError(
+                    f"Poisson({self.poisson_rate}) overflows "
+                    f"max_requests_per_tick={self.max_requests_per_tick} on "
+                    f"{p_trunc:.1%} of node-ticks (> 5%), silently biasing "
+                    f"the realized write rate; raise it to >= {need} or "
+                    f"lower poisson_rate"
+                )
         if self.churn_period > 0 and not (0.0 < self.churn_fraction < 1.0):
             raise ValueError("churn_fraction must be in (0, 1) when churn is on")
 
     @property
     def mutable(self) -> bool:
         """Keys can be re-written -> live coherence pass + keyed durability."""
-        return self.popularity == "zipf"
+        return self.popularity in ("zipf", "trace")
 
     @property
     def has_churn(self) -> bool:
         return self.churn_period > 0
+
+    @property
+    def stream_indexed(self) -> bool:
+        """Stream durability needs the carried cumulative-write index: churn
+        or rate modulation makes the closed-form ``t*N + n`` wrong because
+        not every (tick, node) cell is written."""
+        return self.popularity == "stream" and (
+            self.rate != "steady" or self.churn_period > 0
+        )
+
+    @property
+    def plan_waves(self) -> int:
+        """Static number of padded write lanes per node per tick (P)."""
+        return self.max_requests_per_tick if self.arrivals == "poisson" else 1
 
 
 # Named presets used by tests, benchmarks and the example driver.
@@ -115,12 +265,26 @@ SCENARIOS: dict[str, WorkloadSpec] = {
         rate="bursty", rate_period=80, rate_duty=0.5,
         churn_period=100, churn_fraction=0.25,
     ),
+    # Poisson write arrivals (up to 4 padded lanes per node per tick)
+    "poisson": WorkloadSpec(
+        popularity="zipf", key_universe=1024, zipf_alpha=0.9,
+        arrivals="poisson", poisson_rate=1.0, max_requests_per_tick=4,
+    ),
+    # YCSB-style synthetic trace replay (zipfian keys, 50/50 read/write mix)
+    "trace_ycsb": WorkloadSpec(
+        popularity="trace", key_universe=1024,
+        trace=TraceSpec(source="ycsb", length=600, read_fraction=0.5,
+                        zipf_alpha=0.99, seed=0),
+    ),
+    # the paper's write-once stream under rolling churn — the combination the
+    # pre-plan engines rejected (needs the cumulative-write ring index)
+    "stream_churn": WorkloadSpec(churn_period=120, churn_fraction=0.2),
 }
 
 
 # --------------------------------------------------------------------------
-# Payload derivation (moved here from the simulator so every runtime shares
-# one definition; versioned payloads make re-writes content-distinguishable).
+# Payload derivation (every runtime shares one definition; versioned
+# payloads make re-writes content-distinguishable).
 # --------------------------------------------------------------------------
 
 def payload_for(key: jax.Array, dim: int) -> jax.Array:
@@ -170,8 +334,142 @@ def sample_key_ids(spec: WorkloadSpec, rng: jax.Array, shape) -> jax.Array:
 
 
 def key_hash(key_ids: jax.Array) -> jax.Array:
-    """The cache-line key (uint32) of a zipf key id."""
+    """The cache-line key (uint32) of a zipf/trace key id."""
     return hash2_u32(jnp.asarray(key_ids, jnp.uint32), jnp.uint32(KEY_SALT))
+
+
+def poisson_counts(spec: WorkloadSpec, k_base: jax.Array, n: int) -> jax.Array:
+    """Per-node Poisson write-request counts for one tick.
+
+    ``k_base`` is the tick's ``k_loss`` split output; the count stream is
+    salted off it (``POISSON_SALT``) exactly like the write-key stream
+    (``WRITE_SALT``), so each draw is independent of the channel draws.
+    """
+    k = jax.random.fold_in(k_base, POISSON_SALT)
+    return jax.random.poisson(k, spec.poisson_rate, (n,)).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Trace replay: synthetic YCSB/Globetraff-style generators + npz loading.
+# --------------------------------------------------------------------------
+
+def materialize_trace(spec: WorkloadSpec, n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Build (or load) the ``(T, n)`` (key_ids, ops) tensors of a trace spec.
+
+    Host-side numpy, deterministic in ``(spec, n)``.  Key ids are validated
+    against ``spec.key_universe``; ops against {OP_WRITE, OP_READ}.
+    """
+    ts = spec.trace
+    assert ts is not None, "materialize_trace needs popularity='trace'"
+    if ts.source == "npz":
+        with np.load(ts.path) as data:
+            for field in ("key_ids", "ops"):
+                if field not in data:
+                    raise ValueError(
+                        f"trace file {ts.path!r} is missing array "
+                        f"{field!r}; expected 'key_ids' and 'ops' of shape "
+                        f"(T, {n})"
+                    )
+            kids = np.asarray(data["key_ids"], dtype=np.int64)
+            ops = np.asarray(data["ops"], dtype=np.int64)
+        if kids.shape != ops.shape or kids.ndim != 2:
+            raise ValueError(
+                f"trace arrays must both be (T, N); got key_ids "
+                f"{kids.shape} vs ops {ops.shape} in {ts.path!r}"
+            )
+        if kids.shape[1] != n:
+            raise ValueError(
+                f"trace {ts.path!r} covers {kids.shape[1]} nodes but the "
+                f"simulation has n_nodes={n}; regenerate the trace or "
+                f"change n_nodes"
+            )
+        if kids.min() < 0 or kids.max() >= spec.key_universe:
+            raise ValueError(
+                f"trace key_ids must lie in [0, key_universe="
+                f"{spec.key_universe}); got range "
+                f"[{kids.min()}, {kids.max()}] in {ts.path!r}"
+            )
+        if not np.isin(ops, (OP_WRITE, OP_READ)).all():
+            raise ValueError(
+                f"trace ops must be {OP_WRITE} (write) or {OP_READ} (read); "
+                f"{ts.path!r} contains other values"
+            )
+        return kids.astype(np.int32), ops.astype(np.int32)
+
+    # One independent generator per component, so each (T, n) tensor is
+    # PREFIX-STABLE in T: TraceSpec(length=2T) replays TraceSpec(length=T)
+    # for the first T ticks (row-major sequential draws), which keeps runs
+    # of different lengths comparable.
+    src_tag = 0 if ts.source == "ycsb" else 1
+    def _rng(component: int):
+        return np.random.default_rng([int(ts.seed), src_tag, component])
+
+    shape = (ts.length, n)
+    ranks = np.arange(1, spec.key_universe + 1, dtype=np.float64)
+    w = ranks ** -float(ts.zipf_alpha)
+    cdf = np.cumsum(w) / np.sum(w)
+    zipf_ids = np.minimum(
+        np.searchsorted(cdf, _rng(0).random(shape)), spec.key_universe - 1
+    )
+    if ts.source == "ycsb":
+        kids = zipf_ids
+    else:  # globetraff: zipfian web traffic blended with uniform P2P
+        p2p = _rng(1).random(shape) < ts.p2p_fraction
+        uniform_ids = _rng(2).integers(0, spec.key_universe, shape)
+        kids = np.where(p2p, uniform_ids, zipf_ids)
+    ops = np.where(_rng(3).random(shape) < ts.read_fraction, OP_READ, OP_WRITE)
+    return kids.astype(np.int32), ops.astype(np.int32)
+
+
+@functools.lru_cache(maxsize=32)
+def _trace_arrays_cached(spec: WorkloadSpec, n: int) -> tuple[np.ndarray, np.ndarray]:
+    return materialize_trace(spec, n)
+
+
+@functools.lru_cache(maxsize=32)
+def _npz_arrays_cached(
+    spec: WorkloadSpec, n: int, stamp: tuple
+) -> tuple[np.ndarray, np.ndarray]:
+    return materialize_trace(spec, n)
+
+
+def _trace_arrays(spec: WorkloadSpec, n: int) -> tuple[np.ndarray, np.ndarray]:
+    if spec.trace is not None and spec.trace.source == "npz":
+        # cache keyed on (mtime, size): a rewritten file is re-read and
+        # re-validated, an unchanged one costs no I/O per call
+        try:
+            st = os.stat(spec.trace.path)
+            stamp = (st.st_mtime_ns, st.st_size)
+        except OSError as e:
+            raise ValueError(
+                f"trace file {spec.trace.path!r} is not readable: {e}"
+            ) from e
+        return _npz_arrays_cached(spec, n, stamp)
+    return _trace_arrays_cached(spec, n)
+
+
+def trace_length(spec: WorkloadSpec, n: int) -> int:
+    """Ticks covered by the (materialized) trace of ``spec``."""
+    return _trace_arrays(spec, n)[0].shape[0]
+
+
+def validate_run(cfg, ticks: int) -> None:
+    """Run-length invariants that need ``ticks`` (called by every runner)."""
+    spec = cfg.workload
+    if spec.popularity == "trace":
+        t_len = trace_length(spec, cfg.n_nodes)
+        if t_len < ticks:
+            raise ValueError(
+                f"trace covers {t_len} ticks but the run asks for {ticks}; "
+                f"extend the trace (TraceSpec(length=...) for synthetic "
+                f"sources, or regenerate the npz) or shorten the run"
+            )
+
+
+def save_trace_npz(path: str, key_ids: np.ndarray, ops: np.ndarray) -> None:
+    """Write a ``(T, N)`` trace in the ``TraceSpec(source='npz')`` format."""
+    np.savez(path, key_ids=np.asarray(key_ids, np.int32),
+             ops=np.asarray(ops, np.int32))
 
 
 # --------------------------------------------------------------------------
@@ -229,3 +527,259 @@ def rejoin_mask(
     t = jnp.asarray(t, jnp.int32)
     back = online_mask(spec, n, t, node) & ~online_mask(spec, n, t - 1, node)
     return back & (t > 0)
+
+
+# --------------------------------------------------------------------------
+# The plan stage: one engine-independent per-tick request materialization.
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PlanState:
+    """Carried state of the plan stage (lives in Sim/FogShard state).
+
+    ``cum_writes`` counts every write the plan has generated so far; on
+    stream-indexed specs (``WorkloadSpec.stream_indexed``) it assigns each
+    generated write its monotone ring-enqueue index, and ``enq_window``
+    remembers those indices for the reader-visible age window:
+    ``enq_window[t % window_ticks, n]`` is the ring index of the row node
+    ``n`` wrote at tick ``t`` (-1 = that node generated nothing that tick).
+    Exact while the ring never overflows — the same caveat as the closed
+    form ``t*N + n`` it generalizes.  Shapes are ``()`` / ``(0, 0)`` when a
+    spec doesn't need them.
+    """
+
+    cum_writes: jax.Array   # int32 — writes generated before this tick
+    enq_window: jax.Array   # (window_ticks, N) int32 ring-index ring buffer
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RequestPlan:
+    """One tick's materialized workload — everything an engine executes.
+
+    Writes are padded to ``(P, N)`` with ``P = spec.plan_waves`` static
+    lanes ("waves"); invalid lanes (``w_valid`` False) are no-ops in every
+    consumer (cache upsert, coherence sweep, ring enqueue).  Reads are
+    full-width ``(N,)`` plus the fused engine's compaction slots ``(R,)``
+    (``slot_*``; R is static per spec).  ``r_enq_idx`` carries the stream
+    durability index (closed-form or cumulative-write window; ``NO_ROW``
+    when the target row was never generated); keyed specs use ``r_kids``.
+    The tick's remaining PRNG split outputs ride along so engines draw the
+    channel/collision randomness from the exact legacy schedule.
+    """
+
+    online: jax.Array       # (N,) bool — fog membership this tick
+    rejoin: jax.Array       # (N,) bool — rejoined (cold) this tick
+    # writes, padded (P, N)
+    w_keys: jax.Array       # uint32 cache-line keys
+    w_kids: jax.Array       # int32 key ids (mutable specs; zeros on stream)
+    w_valid: jax.Array      # bool — lane generates a write
+    # reads, (N,)
+    reading: jax.Array      # bool — node issues a read this tick
+    r_keys: jax.Array       # uint32
+    r_kids: jax.Array       # int32 key ids (mutable specs)
+    r_enq_idx: jax.Array    # int32 stream durability index (or NO_ROW)
+    r_fill_ts: jax.Array    # int32 stream fill version stamp (r_tick)
+    r_src: jax.Array        # int32 stream fill origin node
+    # fused-engine reader-compaction slots, (R,)
+    slot_id: jax.Array      # int32 raw slot node id (may be >= N: OOB-drop)
+    slot_nid: jax.Array     # int32 clipped slot node id (safe gather)
+    slot_ok: jax.Array      # bool — slot holds a live reader
+    # the tick's remaining PRNG schedule (legacy split(rng, 6) outputs)
+    k_deliver: jax.Array    # broadcast delivery-loss draw
+    k_resp: jax.Array       # fog response-loss draw
+    k_coll: jax.Array       # store write-collision draw
+    rng_next: jax.Array     # the carried key for the next tick
+    state_next: PlanState   # plan state after this tick
+
+
+def init_plan_state(cfg) -> PlanState:
+    spec = cfg.workload
+    if spec.stream_indexed:
+        shape = (cfg.window_ticks, cfg.n_nodes)
+    else:
+        shape = (0, 0)
+    return PlanState(
+        cum_writes=jnp.int32(0),
+        enq_window=jnp.full(shape, -1, jnp.int32),
+    )
+
+
+def _trace_tick(spec: WorkloadSpec, n: int, t: jax.Array):
+    """The trace's (key_ids, ops) row for tick ``t`` (clamped past T)."""
+    kids, ops = _trace_arrays(spec, n)
+    kids_t = jax.lax.dynamic_index_in_dim(
+        jnp.asarray(kids), t, axis=0, keepdims=False
+    )
+    ops_t = jax.lax.dynamic_index_in_dim(
+        jnp.asarray(ops), t, axis=0, keepdims=False
+    )
+    return kids_t, ops_t
+
+
+def plan_tick(cfg, plan_state: PlanState, t: jax.Array, rng: jax.Array) -> RequestPlan:
+    """Materialize one tick's workload as a ``RequestPlan``.
+
+    Engine-independent: the fused, reference and distributed engines all
+    consume the same plan (the distributed runtime slices lanes by shard
+    node ids).  For specs expressible before the plan/execute split this
+    consumes the EXACT legacy PRNG schedule — ``split(rng, 6)`` into
+    ``(rng', k_loss, k_age, k_src, k_qloss, k_coll)``, write keys salted
+    off ``k_loss`` with ``WRITE_SALT``, read draws from ``k_age``/``k_src``
+    — so unchanged scenarios produce bit-identical series on every engine.
+    """
+    spec = cfg.workload
+    n = cfg.n_nodes
+    t = jnp.asarray(t, jnp.int32)
+    node_ids = jnp.arange(n, dtype=jnp.int32)
+    rng_next, k_loss, k_age, k_src, k_qloss, k_coll = jax.random.split(rng, 6)
+
+    # ---- membership masks --------------------------------------------------
+    if spec.has_churn:
+        online = online_mask(spec, n, t)
+        rejoin = rejoin_mask(spec, n, t)
+    else:
+        online = jnp.ones((n,), bool)
+        rejoin = jnp.zeros((n,), bool)
+
+    # ---- writes ------------------------------------------------------------
+    trace_kids_t = trace_ops_t = None
+    if spec.popularity == "trace":
+        trace_kids_t, trace_ops_t = _trace_tick(spec, n, t)
+        w_mask = (trace_ops_t == OP_WRITE) & rate_mask(spec, n, t) & online
+        w_kids = trace_kids_t[None, :]
+        w_keys = key_hash(trace_kids_t)[None, :]
+        w_valid = w_mask[None, :]
+    elif spec.arrivals == "poisson":
+        counts = poisson_counts(spec, k_loss, n)
+        p_lanes = spec.max_requests_per_tick
+        lane = jnp.arange(p_lanes, dtype=jnp.int32)
+        lane_ok = lane[:, None] < jnp.minimum(counts, p_lanes)[None, :]
+        k_wr = jax.random.fold_in(k_loss, WRITE_SALT)
+        w_kids = sample_key_ids(spec, k_wr, (p_lanes, n))
+        w_keys = key_hash(w_kids)
+        w_valid = lane_ok & (rate_mask(spec, n, t) & online)[None, :]
+    elif spec.mutable:
+        # zipf cadence — the exact pre-plan `_gen_writes_keyed` consumption.
+        k_wr = jax.random.fold_in(k_loss, WRITE_SALT)
+        kids = sample_key_ids(spec, k_wr, (n,))
+        w_kids = kids[None, :]
+        w_keys = key_hash(kids)[None, :]
+        w_valid = (rate_mask(spec, n, t) & online)[None, :]
+    else:
+        # the paper's stream: key = hash(tick, node)
+        keys = hash2_u32(
+            jnp.full((n,), t, jnp.uint32), node_ids.astype(jnp.uint32)
+        )
+        w_keys = keys[None, :]
+        w_kids = jnp.zeros((1, n), jnp.int32)
+        if spec.stream_indexed:
+            w_valid = (rate_mask(spec, n, t) & online)[None, :]
+        else:
+            w_valid = jnp.ones((1, n), bool)
+
+    # ---- cumulative-write ring indexing ------------------------------------
+    n_new = jnp.sum(w_valid.astype(jnp.int32))
+    enq_window = plan_state.enq_window
+    if spec.stream_indexed:
+        v = w_valid[0]
+        rank = jnp.cumsum(v.astype(jnp.int32)) - 1  # enqueue lane order
+        idx_row = jnp.where(v, plan_state.cum_writes + rank, -1)
+        enq_window = enq_window.at[t % cfg.window_ticks].set(idx_row)
+    state_next = PlanState(
+        cum_writes=plan_state.cum_writes + n_new, enq_window=enq_window
+    )
+
+    # ---- reads -------------------------------------------------------------
+    zeros_i = jnp.zeros((n,), jnp.int32)
+    if spec.popularity == "trace":
+        reading = (trace_ops_t == OP_READ) & online
+        r_kids = trace_kids_t
+        r_keys = key_hash(trace_kids_t)
+        r_enq_idx = zeros_i
+        r_fill_ts = jnp.full((n,), -1, jnp.int32)
+        r_src = jnp.full((n,), -1, jnp.int32)
+    elif spec.mutable:
+        # the exact pre-plan `_read_draws_keyed` consumption.
+        reading = ((t + node_ids) % cfg.read_period == 0) & (t > 0) & online
+        r_kids = sample_key_ids(spec, k_age, (n,))
+        r_keys = key_hash(r_kids)
+        r_enq_idx = zeros_i
+        r_fill_ts = jnp.full((n,), -1, jnp.int32)
+        r_src = jnp.full((n,), -1, jnp.int32)
+    else:
+        # the exact pre-plan `_read_draws` consumption.
+        reading = ((t + node_ids) % cfg.read_period == 0) & (t > 0)
+        if spec.has_churn:
+            reading = reading & online
+        window = jnp.minimum(jnp.int32(cfg.window_ticks), jnp.maximum(t, 1))
+        ages = jax.random.randint(k_age, (n,), 0, window, dtype=jnp.int32)
+        ages = jnp.minimum(ages, t)  # only existing data
+        src = jax.random.randint(k_src, (n,), 0, n, dtype=jnp.int32)
+        r_tick = t - ages
+        r_keys = hash2_u32(r_tick.astype(jnp.uint32), src.astype(jnp.uint32))
+        r_kids = zeros_i
+        if spec.stream_indexed:
+            # cumulative-write index of the target row (ages < window_ticks,
+            # so the ring still holds it); NO_ROW if it was never generated.
+            idx = enq_window[r_tick % cfg.window_ticks, src]
+            r_enq_idx = jnp.where(idx >= 0, idx, jnp.int32(NO_ROW))
+        else:
+            r_enq_idx = r_tick * n + src  # FIFO enqueue order = (tick, node)
+        r_fill_ts = r_tick
+        r_src = src
+
+    # ---- fused-engine reader-compaction slots ------------------------------
+    if spec.popularity == "trace":
+        # trace reads are an arbitrary per-tick subset: no arithmetic
+        # progression to exploit, R = N.
+        slot_id = node_ids
+        slot_nid = node_ids
+        slot_ok = reading
+    else:
+        # The stagger activates exactly the nodes ≡ -t (mod read_period):
+        # an arithmetic progression of static length R = ceil(N / period).
+        p = cfg.read_period
+        r_slots = cfg.readers_per_tick
+        first = jnp.mod(-t, p).astype(jnp.int32)
+        slot_id = first + p * jnp.arange(r_slots, dtype=jnp.int32)
+        slot_ok = (slot_id < n) & (t > 0)
+        slot_nid = jnp.minimum(slot_id, n - 1)
+        if spec.has_churn:
+            slot_ok = slot_ok & online[slot_nid]
+
+    return RequestPlan(
+        online=online, rejoin=rejoin,
+        w_keys=w_keys, w_kids=w_kids, w_valid=w_valid,
+        reading=reading, r_keys=r_keys, r_kids=r_kids,
+        r_enq_idx=r_enq_idx, r_fill_ts=r_fill_ts, r_src=r_src,
+        slot_id=slot_id, slot_nid=slot_nid, slot_ok=slot_ok,
+        k_deliver=k_loss, k_resp=k_qloss, k_coll=k_coll,
+        rng_next=rng_next, state_next=state_next,
+    )
+
+
+def plan_write_rows(cfg, plan: RequestPlan, wave: int, t: jax.Array) -> CacheLine:
+    """Materialize write wave ``wave`` of a plan as full-fog ``CacheLine``s.
+
+    Shared by all three engines (the distributed runtime tree-maps its shard
+    slice out of the result).  Payload lanes are pure functions of
+    (key, version) — ``versioned_payload`` on mutable specs, ``payload_for``
+    on the write-once stream — exactly the pre-plan derivations.
+    """
+    n = cfg.n_nodes
+    keys = plan.w_keys[wave]
+    ts = jnp.full((n,), t, jnp.int32)
+    if cfg.workload.mutable:
+        data = versioned_payload(keys, ts, cfg.payload_dim)
+    else:
+        data = payload_for(keys, cfg.payload_dim)
+    return CacheLine(
+        key=keys,
+        data_ts=ts,
+        origin=jnp.arange(n, dtype=jnp.int32),
+        data=data,
+        valid=plan.w_valid[wave],
+        dirty=jnp.zeros((n,), bool),
+    )

@@ -108,6 +108,12 @@ CASES: dict[str, ConformanceCase] = {
     "zipf_thinned": _case(
         SCENARIOS["zipf"], 100, _MUT, metrics_every=5,
     ),
+    # -- plan-stage workload axes (DESIGN.md §7): Poisson padded write
+    # lanes, (T, N) trace replay, and the stream × churn combination that
+    # needs the cumulative-write ring index --------------------------------
+    "poisson": _case(SCENARIOS["poisson"], 100, _MUT),
+    "trace": _case(SCENARIOS["trace_ycsb"], 120, _MUT),
+    "stream_churn": _case(SCENARIOS["stream_churn"], 130, ("churn_rejoins",)),
     # -- loss-model / insert-policy variants --------------------------------
     "paper_ge": _case(
         SCENARIOS["paper"], 70, loss_model="gilbert_elliott",

@@ -25,6 +25,8 @@ GROUPS = {
     "scenarios_b": ("bursty", "diurnal", "churn", "storm"),
     "outages": ("paper_outage", "zipf_outage", "churn_outage", "paper_replicate",
                 "zipf_thinned"),
+    # plan-stage workload axes (Poisson lanes, trace replay, stream×churn)
+    "plans": ("poisson", "trace", "stream_churn"),
 }
 
 

@@ -1,0 +1,180 @@
+"""Property-based tests (hypothesis) for the plan-stage workload invariants.
+
+Three families, matching the plan/execute split's load-bearing claims
+(DESIGN.md §7):
+
+* **Poisson-arrival conservation** — every request the arrival process
+  generates is either executed (a valid plan lane) or padded-invalid
+  (truncated by the static ``max_requests_per_tick`` bound or masked by
+  rate/churn); engines execute exactly the valid lanes (``writes_gen``).
+* **Cumulative-write-index monotonicity** — on stream×churn/modulation
+  specs the carried ``PlanState`` assigns each *actually generated* write a
+  ring index; the assignment must be the contiguous monotone sequence
+  ``0, 1, 2, ...`` in generation order (ticks ascending, node id ascending
+  within a tick) — exactly what ``writeback.enqueue`` will hand out.
+* **Trace replay determinism** — a trace spec produces one and only one
+  series: identical across engines and across repeated runs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from conformance import assert_series_identical
+from repro.core import workload as wl
+from repro.core.simulator import SimConfig, run_sim
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+_plan_step = jax.jit(wl.plan_tick, static_argnums=(0,))
+
+
+def _plan_series(cfg: SimConfig, ticks: int, seed: int):
+    """Host-side replay of the plan stage alone (no engine)."""
+    state = wl.init_plan_state(cfg)
+    rng = jax.random.PRNGKey(seed)
+    plans = []
+    for t in range(ticks):
+        plan = _plan_step(cfg, state, jnp.int32(t), rng)
+        plans.append(plan)
+        state, rng = plan.state_next, plan.rng_next
+    return plans
+
+
+# ---------------------------------------------------------------------------
+# Poisson-arrival conservation
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    # bounds chosen to pass the spec's truncation-bias validation
+    # (P[X > max_req] <= 5%); truncation itself still occurs in the tail
+    rate=st.floats(0.2, 1.3),
+    max_req=st.integers(3, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_poisson_generated_equals_executed_plus_padded(rate, max_req, seed):
+    spec = wl.WorkloadSpec(
+        popularity="zipf", key_universe=128, zipf_alpha=1.0,
+        arrivals="poisson", poisson_rate=rate, max_requests_per_tick=max_req,
+    )
+    cfg = SimConfig(n_nodes=6, cache_lines=24, loss_prob=0.0, workload=spec)
+    rng = jax.random.PRNGKey(seed)
+    _, k_loss, *_ = jax.random.split(rng, 6)
+    counts = np.asarray(wl.poisson_counts(spec, k_loss, cfg.n_nodes))
+    plan = wl.plan_tick(cfg, wl.init_plan_state(cfg), jnp.int32(3), rng)
+    executed = int(np.sum(np.asarray(plan.w_valid)))
+    padded_invalid = plan.w_valid.size - executed
+    # steady rate, no churn: the only invalid lanes are Poisson padding
+    assert executed == int(np.minimum(counts, max_req).sum())
+    assert executed + padded_invalid == max_req * cfg.n_nodes
+    # per-node: lanes are filled from 0 upward (a prefix), never scattered
+    valid = np.asarray(plan.w_valid)
+    per_node = valid.sum(axis=0)
+    for lane in range(max_req):
+        np.testing.assert_array_equal(valid[lane], lane < per_node)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_poisson_engine_executes_exactly_the_plan(seed):
+    spec = wl.SCENARIOS["poisson"]
+    cfg = SimConfig(n_nodes=6, cache_lines=24, loss_prob=0.02, workload=spec)
+    ticks = 20
+    _, series = run_sim(cfg, ticks, seed=seed)
+    planned = [
+        int(np.sum(np.asarray(p.w_valid))) for p in _plan_series(cfg, ticks, seed)
+    ]
+    np.testing.assert_array_equal(np.asarray(series.writes_gen), planned)
+
+
+# ---------------------------------------------------------------------------
+# Cumulative-write-index monotonicity under churn/modulation
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    churn_period=st.integers(5, 20),
+    churn_fraction=st.floats(0.1, 0.6),
+    bursty=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_stream_indexed_assignment_is_contiguous_and_monotone(
+    churn_period, churn_fraction, bursty, seed
+):
+    spec = wl.WorkloadSpec(
+        churn_period=churn_period, churn_fraction=churn_fraction,
+        **({"rate": "bursty", "rate_period": 8, "rate_duty": 0.5} if bursty else {}),
+    )
+    assert spec.stream_indexed
+    cfg = SimConfig(n_nodes=8, cache_lines=32, loss_prob=0.0, workload=spec)
+    ticks = 30
+    plans = _plan_series(cfg, ticks, seed)
+    w = cfg.window_ticks
+    cum = 0
+    for t, plan in enumerate(plans):
+        valid = np.asarray(plan.w_valid[0])
+        row = np.asarray(plan.state_next.enq_window)[t % w]
+        # invalid lanes carry no index; valid lanes carry the NEXT cum
+        # indices in node order — contiguous, monotone, no gaps or reuse
+        np.testing.assert_array_equal(row >= 0, valid)
+        np.testing.assert_array_equal(
+            row[valid], cum + np.arange(valid.sum())
+        )
+        cum += int(valid.sum())
+        assert int(plan.state_next.cum_writes) == cum
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_stream_churn_engines_agree_and_forward_under_outage(seed):
+    """End-to-end: the windowed ring index keeps §VI durability semantics on
+    the stream×churn spec — engines bit-identical, ring forwarding live."""
+    cfg = SimConfig(
+        n_nodes=8, cache_lines=32, loss_prob=0.02, read_period=4,
+        workload=wl.WorkloadSpec(churn_period=15, churn_fraction=0.25),
+        outage_schedule=((20, 25),),
+    )
+    _, ref = run_sim(cfg, 60, seed=seed, engine="reference")
+    _, fused = run_sim(cfg, 60, seed=seed, engine="fused")
+    assert_series_identical(ref, fused, "stream_churn outage")
+    # no synchronous store reads while the store is down
+    win = slice(20, 45)
+    n_store = int(np.sum(np.asarray(fused.store_found)[win])
+                  + np.sum(np.asarray(fused.store_missing)[win]))
+    assert n_store == 0
+
+
+# ---------------------------------------------------------------------------
+# Trace replay determinism
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(
+    trace_seed=st.integers(0, 2**16),
+    sim_seed=st.integers(0, 2**16),
+    source=st.sampled_from(["ycsb", "globetraff"]),
+)
+def test_trace_replay_deterministic_across_engines(trace_seed, sim_seed, source):
+    spec = wl.WorkloadSpec(
+        popularity="trace", key_universe=64,
+        trace=wl.TraceSpec(source=source, length=40, read_fraction=0.5,
+                           zipf_alpha=1.0, seed=trace_seed),
+    )
+    cfg = SimConfig(n_nodes=6, cache_lines=24, loss_prob=0.02, workload=spec)
+    _, ref = run_sim(cfg, 40, seed=sim_seed, engine="reference")
+    _, fused = run_sim(cfg, 40, seed=sim_seed, engine="fused")
+    _, again = run_sim(cfg, 40, seed=sim_seed, engine="fused")
+    assert_series_identical(ref, fused, f"trace[{source}] ref vs fused")
+    assert_series_identical(fused, again, f"trace[{source}] rerun")
+    # the trace's read schedule is what the engines executed
+    kids, ops = wl.materialize_trace(spec, cfg.n_nodes)
+    np.testing.assert_array_equal(
+        np.asarray(ref.reads), (ops[:40] == wl.OP_READ).sum(axis=1)
+    )

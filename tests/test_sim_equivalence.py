@@ -23,7 +23,7 @@ import pytest
 from conformance import assert_series_identical
 from repro.core.metrics import summarize
 from repro.core.simulator import SimConfig, run_sim
-from repro.core.workload import SCENARIOS, WorkloadSpec
+from repro.core.workload import SCENARIOS, TraceSpec, WorkloadSpec
 
 
 _slow = pytest.mark.slow
@@ -120,6 +120,91 @@ def test_scenarios_fused_matches_reference(case, seed):
     assert s["writes_coalesced"] > 0, name
     if spec.has_churn:
         assert s["churn_rejoins"] > 0, name
+
+
+NEW_AXIS_CASES = [
+    # Poisson padded write lanes (P=4 waves through insert/update/enqueue)
+    ("poisson", 120, SCENARIOS["poisson"]),
+    # synthetic YCSB-style trace replay (arbitrary per-tick reader sets)
+    pytest.param(
+        ("trace_ycsb", 150, WorkloadSpec(
+            popularity="trace", key_universe=256,
+            trace=TraceSpec(source="ycsb", length=150, read_fraction=0.5,
+                            zipf_alpha=1.1, seed=5))),
+        marks=_slow,
+    ),
+    # Globetraff-style mixed traffic
+    pytest.param(
+        ("trace_globetraff", 150, WorkloadSpec(
+            popularity="trace", key_universe=256,
+            trace=TraceSpec(source="globetraff", length=150,
+                            read_fraction=0.6, p2p_fraction=0.4, seed=6))),
+        marks=_slow,
+    ),
+    # the formerly rejected stream×churn (cumulative-write ring index)
+    ("stream_churn", 160, WorkloadSpec(churn_period=50, churn_fraction=0.25)),
+    # stream × bursty modulation (the other formerly rejected combination)
+    pytest.param(
+        ("stream_bursty", 160, WorkloadSpec(
+            rate="bursty", rate_period=30, rate_duty=0.5)),
+        marks=_slow,
+    ),
+]
+
+
+@pytest.mark.parametrize(
+    "case", NEW_AXIS_CASES, ids=lambda c: c[0] if isinstance(c, tuple) else None
+)
+@pytest.mark.parametrize(
+    "seed", [0, pytest.param(7, marks=pytest.mark.slow)]
+)
+def test_new_workload_axes_fused_matches_reference(case, seed):
+    """The plan-stage axes (Poisson arrivals, trace replay, stream×churn/
+    modulation) obey the same bit-identity contract as every other spec."""
+    name, ticks, spec = case
+    cfg = SimConfig(n_nodes=11, cache_lines=44, loss_prob=0.02, workload=spec)
+    _, ref = run_sim(cfg, ticks, seed=seed, engine="reference")
+    _, fused = run_sim(cfg, ticks, seed=seed, engine="fused")
+    assert_series_identical(ref, fused)
+    s = summarize(fused)
+    assert s["reads"] > 0
+    if spec.mutable:
+        assert s["coherence_updates"] > 0, name
+        assert s["writes_coalesced"] > 0, name
+    else:
+        # stream keys stay write-once: the fused engine's sweep skip must
+        # remain a theorem even under churn/modulation
+        assert s["coherence_updates"] == 0, name
+    if spec.has_churn:
+        assert s["churn_rejoins"] > 0, name
+
+
+@pytest.mark.slow
+def test_presets_match_committed_bench():
+    """Every ``workload.SCENARIOS`` preset must reproduce the committed
+    BENCH_scenarios.json metrics EXACTLY (same expression trees, same PRNG
+    streams) — the plan/execute refactor's no-drift regression gate.  Run
+    at the bench's geometry and seed (the timed run uses seed=1)."""
+    import json
+    import pathlib
+
+    bench = json.loads(
+        (pathlib.Path(__file__).parent.parent / "BENCH_scenarios.json").read_text()
+    )
+    fields = (
+        "read_miss_ratio", "sync_store_request_ratio",
+        "wan_reduction_vs_baseline", "stale_read_ratio",
+        "coherence_updates", "writes_coalesced", "churn_rejoins",
+    )
+    for row in bench["scenarios"]:
+        cfg = SimConfig(
+            n_nodes=bench["n_nodes"], cache_lines=200, loss_prob=0.01,
+            workload=SCENARIOS[row["scenario"]],
+        )
+        _, series = run_sim(cfg, bench["ticks"], seed=1)
+        s = summarize(series)
+        diffs = {f: (row[f], s[f]) for f in fields if s[f] != row[f]}
+        assert not diffs, f"{row['scenario']}: diverged from committed BENCH {diffs}"
 
 
 def test_default_scenario_skips_coherence_but_reference_proves_noop():

@@ -19,11 +19,67 @@ class TestSpec:
         spec = wl.WorkloadSpec()
         assert not spec.mutable and not spec.has_churn
 
-    def test_stream_rejects_modulation_and_churn(self):
-        with pytest.raises(ValueError):
-            wl.WorkloadSpec(rate="bursty")
-        with pytest.raises(ValueError):
-            wl.WorkloadSpec(churn_period=50)
+    def test_stream_churn_and_modulation_now_allowed(self):
+        """The plan stage's cumulative-write ring index (PlanState) lifted
+        the old stream×churn/modulation rejection."""
+        assert wl.WorkloadSpec(rate="bursty").stream_indexed
+        assert wl.WorkloadSpec(churn_period=50).stream_indexed
+        assert not wl.WorkloadSpec().stream_indexed
+
+    def test_poisson_validation(self):
+        ok = wl.WorkloadSpec(popularity="zipf", arrivals="poisson",
+                             max_requests_per_tick=3)
+        assert ok.plan_waves == 3
+        with pytest.raises(ValueError, match="requires popularity='zipf'"):
+            wl.WorkloadSpec(arrivals="poisson")
+        with pytest.raises(ValueError, match="poisson_rate must be > 0"):
+            wl.WorkloadSpec(popularity="zipf", arrivals="poisson",
+                            poisson_rate=0.0)
+        with pytest.raises(ValueError, match="max_requests_per_tick"):
+            wl.WorkloadSpec(popularity="zipf", arrivals="poisson",
+                            max_requests_per_tick=0)
+        # lane bound far below the mean would silently truncate arrivals
+        with pytest.raises(ValueError, match="overflows"):
+            wl.WorkloadSpec(popularity="zipf", arrivals="poisson",
+                            poisson_rate=2.0, max_requests_per_tick=1)
+
+    def test_trace_validation(self):
+        with pytest.raises(ValueError, match="needs a TraceSpec"):
+            wl.WorkloadSpec(popularity="trace")
+        with pytest.raises(ValueError, match="only meaningful"):
+            wl.WorkloadSpec(popularity="zipf", trace=wl.TraceSpec())
+        with pytest.raises(ValueError, match="length must be >= 1"):
+            wl.TraceSpec(length=0)
+        with pytest.raises(ValueError, match="path=<file.npz>"):
+            wl.TraceSpec(source="npz")
+        with pytest.raises(ValueError, match="read_fraction"):
+            wl.TraceSpec(read_fraction=1.5)
+
+    @pytest.mark.parametrize("source", ["ycsb", "globetraff"])
+    def test_synthetic_traces_are_prefix_stable(self, source):
+        """A longer synthetic trace must REPLAY a shorter one for the
+        common prefix (per-component generators), so runs of different
+        lengths stay comparable."""
+        def build(length):
+            spec = wl.WorkloadSpec(
+                popularity="trace", key_universe=64,
+                trace=wl.TraceSpec(source=source, length=length, seed=11),
+            )
+            return wl.materialize_trace(spec, 5)
+
+        kids_s, ops_s = build(20)
+        kids_l, ops_l = build(50)
+        np.testing.assert_array_equal(kids_l[:20], kids_s)
+        np.testing.assert_array_equal(ops_l[:20], ops_s)
+
+    def test_trace_run_length_validated(self):
+        spec = wl.WorkloadSpec(
+            popularity="trace", key_universe=64,
+            trace=wl.TraceSpec(source="ycsb", length=20),
+        )
+        cfg = SimConfig(n_nodes=4, cache_lines=16, workload=spec)
+        with pytest.raises(ValueError, match="trace covers 20 ticks"):
+            run_sim(cfg, 30, seed=0)
 
     def test_scenarios_registry_well_formed(self):
         assert "paper" in wl.SCENARIOS
