@@ -48,6 +48,32 @@ def bench_kernels() -> None:
         us = time_fn(lambda: ops.ssd_scan(st, dec, None, backend=backend))
         emit(f"kern.ssd_scan.{backend}", us, f"chunks={c};heads={h}")
 
+    # flic_insert: batched one-line-per-node upsert (simulator geometry)
+    n_nodes, s3, w3, d3 = 200, 50, 4, 8
+    i_tags = rng.integers(0, 2**31 - 1, (n_nodes, s3, w3)).astype(np.int32)
+    i_ts = rng.integers(0, 10_000, (n_nodes, s3, w3)).astype(np.int32)
+    i_ins = rng.integers(0, 10_000, (n_nodes, s3, w3)).astype(np.int32)
+    i_org = rng.integers(0, n_nodes, (n_nodes, s3, w3)).astype(np.int32)
+    i_valid = rng.random((n_nodes, s3, w3)) < 0.8
+    i_dirty = rng.random((n_nodes, s3, w3)) < 0.3
+    i_use = rng.integers(0, 10_000, (n_nodes, s3, w3)).astype(np.int32)
+    i_data = rng.standard_normal((n_nodes, s3, w3, d3)).astype(np.float32)
+    i_keys = rng.integers(0, 2**31 - 1, n_nodes).astype(np.int32)
+    i_sidx = (i_keys.astype(np.int64) % s3).astype(np.int32)
+    i_lts = rng.integers(0, 20_000, n_nodes).astype(np.int32)
+    i_lorg = rng.integers(0, n_nodes, n_nodes).astype(np.int32)
+    i_ldirty = rng.random(n_nodes) < 0.5
+    i_live = rng.random(n_nodes) < 0.9
+    i_ldata = rng.standard_normal((n_nodes, d3)).astype(np.float32)
+    for backend in ("interpret", "xla"):
+        us = time_fn(lambda: ops.flic_insert(
+            i_tags, i_ts, i_ins, i_org, i_valid, i_dirty, i_use, i_data,
+            i_keys, i_sidx, i_lts, i_lorg, i_ldirty, i_live, i_ldata,
+            jnp.int32(99), backend=backend,
+        ))
+        emit(f"kern.flic_insert.{backend}", us,
+             f"n={n_nodes};cache={s3}x{w3}")
+
     # flic_merge: shard reconciliation
     s2 = 512
     a = (

@@ -14,10 +14,22 @@ engines emit identical metrics, so this is a pure implementation race.
 The N ∈ {500, 1000} rows watch the scaling cliff the scatter-lean
 primitives flattened (DESIGN.md §3).
 
+Two fan-out sections watch the O(N·K) tick (DESIGN.md §9):
+
+* ``fanout_configs`` — fused-only rows at N ∈ {1000, 2000, 5000, 10000}
+  with the K=32 ring neighborhood, the city-scale claim of ISSUE 6: the
+  N=10,000 row must hold ≥ 10 ticks/s and the N=1000 row ≥ 3× the dense
+  fused rate committed BEFORE the §9 draws landed (the R-compact response
+  draw sped the dense path up too, so the in-run dense row understates
+  the win — the in-run gate is a looser 1.5×);
+* ``fanout_sweep`` — K ∈ {8, 32, 128} at fixed N, isolating the per-peer
+  cost of the K-lane probe from the node-count axis.
+
 Usage: ``PYTHONPATH=src python -m benchmarks.sim_bench [--quick]``
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import sys
 import time
@@ -30,6 +42,24 @@ from benchmarks.common import emit
 NODE_COUNTS = (50, 200, 500)
 FUSED_ONLY_COUNTS = (1000,)
 TICKS = 600
+
+FANOUT_K = 32
+FANOUT_COUNTS = (1000, 2000, 5000, 10000)
+FANOUT_SWEEP_N = 2000
+FANOUT_SWEEP_KS = (8, 32, 128)
+# City-scale rows amortize compile over fewer ticks; rates are steady-state
+# (one warmup run) so the shorter series measures the same per-tick cost.
+FANOUT_TICKS_SMALL, FANOUT_TICKS_LARGE = 600, 120
+# Dense fused N=1000 rate committed before the §9 R-compact draws landed
+# (BENCH_sim.json at PR 5) — the fan-out acceptance anchor.
+PRE_COMPACT_N1000_TICKS_PER_S = 77.7
+
+
+def _fanout_cfg(n: int, k: int) -> SimConfig:
+    cfg = SimConfig(n_nodes=n, cache_lines=200, insert_policy="directory")
+    return dataclasses.replace(
+        cfg, workload=dataclasses.replace(cfg.workload, fanout=k)
+    )
 
 
 def _time_run(cfg: SimConfig, ticks: int, engine: str) -> float:
@@ -44,6 +74,8 @@ def _time_run(cfg: SimConfig, ticks: int, engine: str) -> float:
 
 def bench_sim(ticks: int = TICKS, node_counts=NODE_COUNTS,
               fused_only_counts=FUSED_ONLY_COUNTS,
+              fanout_counts=FANOUT_COUNTS,
+              fanout_sweep_ks=FANOUT_SWEEP_KS,
               out_path: str = "BENCH_sim.json") -> dict:
     results = {"ticks": ticks, "configs": []}
     for n in node_counts:
@@ -68,6 +100,33 @@ def bench_sim(ticks: int = TICKS, node_counts=NODE_COUNTS,
         emit(f"sim.fused.n{n}", 1e6 * secs / ticks, f"ticks_per_s={rate:.1f}")
         results["configs"].append({"n_nodes": n, "fused_ticks_per_s": rate})
 
+    if fanout_counts:
+        results["fanout_configs"] = []
+        for n in fanout_counts:
+            fticks = FANOUT_TICKS_SMALL if n <= 2000 else FANOUT_TICKS_LARGE
+            secs = _time_run(_fanout_cfg(n, FANOUT_K), fticks, "fused")
+            rate = fticks / secs
+            emit(f"sim.fanout.n{n}.k{FANOUT_K}", 1e6 * secs / fticks,
+                 f"ticks_per_s={rate:.1f}")
+            results["fanout_configs"].append({
+                "n_nodes": n, "fanout": FANOUT_K, "ticks": fticks,
+                "fused_ticks_per_s": rate,
+            })
+
+    if fanout_sweep_ks:
+        results["fanout_sweep"] = []
+        for k in fanout_sweep_ks:
+            secs = _time_run(
+                _fanout_cfg(FANOUT_SWEEP_N, k), FANOUT_TICKS_SMALL, "fused"
+            )
+            rate = FANOUT_TICKS_SMALL / secs
+            emit(f"sim.fanout.n{FANOUT_SWEEP_N}.k{k}",
+                 1e6 * secs / FANOUT_TICKS_SMALL, f"ticks_per_s={rate:.1f}")
+            results["fanout_sweep"].append({
+                "n_nodes": FANOUT_SWEEP_N, "fanout": k,
+                "ticks": FANOUT_TICKS_SMALL, "fused_ticks_per_s": rate,
+            })
+
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2)
     return results
@@ -79,10 +138,21 @@ def main() -> None:
         ticks=150 if quick else TICKS,
         node_counts=(50, 200) if quick else NODE_COUNTS,
         fused_only_counts=() if quick else FUSED_ONLY_COUNTS,
+        fanout_counts=() if quick else FANOUT_COUNTS,
+        fanout_sweep_ks=() if quick else FANOUT_SWEEP_KS,
     )
     gate = next((r for r in res["configs"] if r["n_nodes"] == 200), None)
     if gate is not None and not quick:
         assert gate["speedup"] >= 3.0, f"fused engine regressed: {gate}"
+    if not quick:
+        city = next(r for r in res["fanout_configs"] if r["n_nodes"] == 10000)
+        assert city["fused_ticks_per_s"] >= 10.0, f"city-scale floor: {city}"
+        k1000 = next(r for r in res["fanout_configs"] if r["n_nodes"] == 1000)
+        dense = next(r for r in res["configs"] if r["n_nodes"] == 1000)
+        anchor = k1000["fused_ticks_per_s"] / PRE_COMPACT_N1000_TICKS_PER_S
+        assert anchor >= 3.0, f"fan-out vs pre-§9 baseline: x{anchor:.2f}"
+        ratio = k1000["fused_ticks_per_s"] / dense["fused_ticks_per_s"]
+        assert ratio >= 1.5, f"fan-out speedup regressed: x{ratio:.2f}"
 
 
 if __name__ == "__main__":

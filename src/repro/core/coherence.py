@@ -45,6 +45,51 @@ class GilbertElliott:
         return GilbertElliott(bad=jnp.zeros((n,), bool))
 
 
+def gilbert_elliott_advance(
+    state: GilbertElliott,
+    rng: jax.Array,
+    p_g2b: float = 0.05,
+    p_b2g: float = 0.4,
+) -> tuple[GilbertElliott, jax.Array]:
+    """Advance every receiver's channel one tick WITHOUT drawing a mask.
+
+    Returns (state, k_mask) where ``k_mask`` is the mask subkey of the
+    legacy three-way split, so a subsequent ``gilbert_elliott_mask`` over
+    the full (N, ...) shape reproduces ``gilbert_elliott_step`` bitwise.
+    The channel advances exactly once per tick even on paths that never
+    consume a delivery mask (DESIGN.md §9).
+    """
+    k1, k2, k_mask = jax.random.split(rng, 3)
+    n = state.bad.shape[0]
+    flip_up = jax.random.uniform(k1, (n,)) < p_g2b
+    flip_dn = jax.random.uniform(k2, (n,)) < p_b2g
+    bad = jnp.where(state.bad, ~flip_dn, flip_up)
+    return GilbertElliott(bad=bad), k_mask
+
+
+def gilbert_elliott_mask(
+    state: GilbertElliott,
+    rng: jax.Array,
+    shape: tuple[int, ...],
+    receivers: jax.Array | None = None,
+    loss_good: float = 0.01,
+    loss_bad: float = 0.5,
+) -> jax.Array:
+    """Delivery mask for an ALREADY-advanced channel.
+
+    ``shape[0]`` indexes receivers; ``receivers`` (optional, (shape[0],))
+    maps each leading row to a global receiver id so compact draws — e.g.
+    the (R, ·) reader-row response mask — pick up the right per-receiver
+    loss probability.  Default: rows are receivers 0..N-1 (dense).
+    """
+    loss_p = jnp.where(state.bad, loss_bad, loss_good)  # (N,)
+    if receivers is not None:
+        loss_p = loss_p[jnp.asarray(receivers, jnp.int32)]
+    assert shape[0] == loss_p.shape[0], "mask leading axis must be receivers"
+    loss_p = loss_p.reshape((shape[0],) + (1,) * (len(shape) - 1))
+    return jax.random.uniform(rng, shape) >= loss_p
+
+
 def gilbert_elliott_step(
     state: GilbertElliott,
     rng: jax.Array,
@@ -55,16 +100,13 @@ def gilbert_elliott_step(
     loss_bad: float = 0.5,
 ) -> tuple[GilbertElliott, jax.Array]:
     """Advance the channel one tick; returns (state, delivered_mask(shape))."""
-    k1, k2, k3 = jax.random.split(rng, 3)
     n = state.bad.shape[0]
     assert shape[0] == n, "mask leading axis must be receivers"
-    flip_up = jax.random.uniform(k1, (n,)) < p_g2b
-    flip_dn = jax.random.uniform(k2, (n,)) < p_b2g
-    bad = jnp.where(state.bad, ~flip_dn, flip_up)
-    loss_p = jnp.where(bad, loss_bad, loss_good)  # (N,)
-    loss_p = loss_p.reshape((n,) + (1,) * (len(shape) - 1))
-    delivered = jax.random.uniform(k3, shape) >= loss_p
-    return GilbertElliott(bad=bad), delivered
+    state, k_mask = gilbert_elliott_advance(state, rng, p_g2b, p_b2g)
+    delivered = gilbert_elliott_mask(
+        state, k_mask, shape, loss_good=loss_good, loss_bad=loss_bad
+    )
+    return state, delivered
 
 
 def merge_broadcasts(

@@ -59,12 +59,16 @@ from repro.core.flic import invalidate_nodes, update_rows
 from repro.core.metrics import TickMetrics, windowed_scan
 from repro.core.simulator import (
     SimConfig,
-    _delivery_mask,
+    _advance_channel,
+    _delivery_mask_dense,
     _insert_own_rows,
     _merge_replicate,
+    _needs_delivery_mask,
+    _neighbor_index,
     _payload_for,
     _resolve_backstop,
     _resolve_backstop_keyed,
+    _response_mask_dense,
 )
 
 
@@ -151,9 +155,17 @@ def fog_shard_tick(
     m = dataclasses.replace(m, writes_gen=n_writes)
 
     # ---- 2. fog broadcast under the loss model; sharded cache merge --------
-    channel, delivered = _delivery_mask(cfg, state.channel, plan.k_deliver, (n, n))
-    if spec.has_churn:
-        delivered = delivered & online[:, None]   # offline nodes hear nothing
+    # R-compact schedule (DESIGN.md §9), evaluated REPLICATED: one channel
+    # advance per tick; the delivery mask is drawn (and expanded from K
+    # lanes under fanout) only when the sweep/merge consumes it.
+    nbr = _neighbor_index(cfg)
+    channel, k_dmask = _advance_channel(cfg, state.channel, plan.k_deliver)
+    if _needs_delivery_mask(cfg):
+        delivered = _delivery_mask_dense(cfg, channel, k_dmask, nbr)
+        if spec.has_churn:
+            delivered = delivered & online[:, None]  # offline nodes hear nothing
+    else:
+        delivered = None  # write-once directory: provably unused
     if cfg.insert_policy == "directory":
         n_coh_l = jnp.int32(0)
         for rows in rows_waves:
@@ -235,11 +247,12 @@ def fog_shard_tick(
         return hit, way, ts, cache.data[sidx_q, way]
 
     hits_qc, way_qc, ts_qc, data_qc = jax.vmap(probe_cache)(caches)  # (nl, n, ..)
-    if cfg.loss_model != "none":
-        # Replicated (reader, responder) response-loss draw — the single-host
-        # engines' exact PRNG consumption — sliced to the local responders.
-        _, resp_mask = _delivery_mask(cfg, channel, plan.k_resp, (n, n))
-        hits_qc = hits_qc & my(jnp.transpose(resp_mask))              # (nl, n)
+    resp_dense = _response_mask_dense(cfg, channel, plan, nbr)
+    if resp_dense is not None:
+        # Replicated (reader, responder) mask — the single-host engines'
+        # exact R-compact PRNG consumption expanded dense (with the fanout
+        # neighborhood baked in) — sliced to the local responders.
+        hits_qc = hits_qc & my(jnp.transpose(resp_dense))             # (nl, n)
     if spec.has_churn:
         hits_qc = hits_qc & online_l[:, None]   # offline responders are silent
     hits_qc = hits_qc & q_need[None, :]

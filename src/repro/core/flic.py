@@ -189,15 +189,27 @@ def _select_way_rows(tags_r, valid_r, use_r, keys):
 
 
 def insert_rows(
-    caches: CacheState, lines: CacheLine, now: jax.Array
-) -> tuple[CacheState, CacheLine]:
+    caches: CacheState, lines: CacheLine, now: jax.Array,
+    backend: str | None = None,
+) -> tuple[CacheState, CacheLine | None]:
     """Upsert one line per node across a batched cache (leading axis N).
 
     Equivalent to ``jax.vmap(insert)(caches, lines)`` but built from one
     gather + one one-hot scatter per field.  Returns (caches, evictions)
     with evictions batched over N; masked lanes (``lines.valid`` False) are
     no-ops, exactly like the scalar path.
+
+    ``backend`` "xla" | "interpret" | "pallas" dispatches the upsert through
+    ``repro.kernels.ops.flic_insert`` (the ``kernels/flic_insert.py`` Pallas
+    kernel fusing all eight per-field scatters into one VMEM-pinned pass, or
+    its pure-jnp oracle) — selected by ``SimConfig.probe_backend`` /
+    ``REPRO_KERNELS`` exactly like the probe and sweep kernels.  The kernel
+    path returns ``evictions=None``: both engine call sites discard the
+    eviction record, and skipping it is what lets the kernel donate every
+    table buffer.  Callers that need evictions use the default backend.
     """
+    if backend not in (None, "fused"):
+        return _insert_rows_kernel(caches, lines, now, backend), None
     n = caches.tags.shape[0]
     s_sets, w_ways = caches.num_sets, caches.num_ways
     keys = jnp.asarray(lines.key, jnp.uint32)
@@ -255,6 +267,40 @@ def insert_rows(
         ).reshape(caches.data.shape),
     )
     return caches, evicted
+
+
+def _insert_rows_kernel(
+    caches: CacheState, lines: CacheLine, now, backend
+) -> CacheState:
+    """Kernel-backed ``insert_rows`` upsert via ``repro.kernels.ops``.
+
+    Unlike the probe/sweep kernels (vmapped per cache), ``flic_insert`` is
+    natively batched over the node axis: one ``pallas_call`` walks node
+    blocks and each node touches only its own probed set row, so all eight
+    tables are donated whole.  Bool tables travel as int32 (TPU-lowerable)
+    and are converted back here, exactly like the sweep kernel path.
+    """
+    from repro.kernels import ops
+
+    keys = jnp.asarray(lines.key, jnp.uint32)
+    sidx = (keys % jnp.uint32(caches.num_sets)).astype(jnp.int32)
+    (tags, data_ts, ins_ts, origin, valid, dirty, last_use, data) = ops.flic_insert(
+        caches.tags.astype(jnp.int32), caches.data_ts, caches.ins_ts,
+        caches.origin, caches.valid, caches.dirty, caches.last_use,
+        caches.data,
+        keys.astype(jnp.int32), sidx,
+        jnp.asarray(lines.data_ts, jnp.int32),
+        jnp.asarray(lines.origin, jnp.int32),
+        jnp.asarray(lines.dirty),
+        jnp.asarray(lines.valid),
+        lines.data,
+        jnp.asarray(now, jnp.int32),
+        backend=backend,
+    )
+    return CacheState(
+        tags=tags.astype(jnp.uint32), data_ts=data_ts, ins_ts=ins_ts,
+        origin=origin, valid=valid, dirty=dirty, last_use=last_use, data=data,
+    )
 
 
 def lookup_rows(

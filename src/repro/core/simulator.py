@@ -68,7 +68,12 @@ from repro.core import backing_store as bs
 from repro.core import workload as wl
 from repro.core import writeback as wb
 from repro.core.cache_state import NULL_TAG, CacheLine, CacheState, empty_cache
-from repro.core.coherence import GilbertElliott, bernoulli_loss_mask, gilbert_elliott_step
+from repro.core.coherence import (
+    GilbertElliott,
+    bernoulli_loss_mask,
+    gilbert_elliott_advance,
+    gilbert_elliott_mask,
+)
 from repro.core.flic import insert_rows, invalidate_nodes, update_rows
 from repro.core.metrics import TickMetrics, windowed_scan
 
@@ -168,13 +173,126 @@ def init_sim(cfg: SimConfig) -> SimState:
     )
 
 
-def _delivery_mask(cfg: SimConfig, channel, rng, shape):
+# --------------------------------------------------------------------------
+# The R-compact PRNG schedule (DESIGN.md §9), shared by all three engines.
+#
+# Per tick the channel advances exactly ONCE (`_advance_channel`, from
+# ``k_deliver``); every mask is then a stateless draw against the advanced
+# channel.  The write-delivery mask is drawn only when a consumer exists
+# (mutable coherence sweep or replicate merge — `_needs_delivery_mask`); the
+# response-loss mask is drawn over the R reader-compaction rows, never
+# (n, n).  Under ``WorkloadSpec.fanout`` both masks compact further to the
+# K neighbor lanes, and the dense engines expand them by scatter.
+# --------------------------------------------------------------------------
+
+def _advance_channel(cfg: SimConfig, channel, k_deliver):
+    """Advance the GE channel once per tick; returns (channel, k_mask).
+
+    ``k_mask`` seeds the tick's write-delivery mask (when drawn).  For the
+    stateless loss models the channel is untouched and ``k_deliver`` is the
+    mask key itself.
+    """
+    if cfg.loss_model == "gilbert_elliott":
+        return gilbert_elliott_advance(channel, k_deliver)
+    return channel, k_deliver
+
+
+def _loss_mask(cfg: SimConfig, channel, rng, shape, receivers=None):
+    """A loss mask over ``shape`` against an ALREADY-advanced channel.
+
+    ``shape[0]`` indexes receivers; ``receivers`` maps compact leading rows
+    (e.g. reader slots) to global node ids for the GE per-receiver loss
+    probability.  True = delivered.
+    """
     if cfg.loss_model == "none":
-        return channel, jnp.ones(shape, bool)
+        return jnp.ones(shape, bool)
     if cfg.loss_model == "bernoulli":
-        return channel, bernoulli_loss_mask(rng, shape, cfg.loss_prob)
-    channel, mask = gilbert_elliott_step(channel, rng, shape)
-    return channel, mask
+        return bernoulli_loss_mask(rng, shape, cfg.loss_prob)
+    return gilbert_elliott_mask(channel, rng, shape, receivers=receivers)
+
+
+def _needs_delivery_mask(cfg: SimConfig) -> bool:
+    """Whether anything consumes the write-delivery mask this scenario.
+
+    The mutable coherence sweep and the replicate merge do; the write-once
+    directory path provably never reads it (the sweep is a no-op), so those
+    scenarios skip the draw entirely (DESIGN.md §9).
+    """
+    return cfg.insert_policy != "directory" or cfg.workload.mutable
+
+
+def _neighbor_index(cfg: SimConfig):
+    """The static (N, K) ring neighbor table, or None when gossip is dense."""
+    if cfg.workload.fanout is None:
+        return None
+    return jnp.asarray(wl.neighbor_table(cfg.n_nodes, cfg.workload.fanout))
+
+
+def _expand_lanes_dense(lanes, nbr, n: int):
+    """Scatter (N, K) per-neighbor-lane values into a dense (N, n) mask.
+
+    Cell (i, nbr[i, k]) takes lanes[i, k]; non-neighbor cells are False —
+    the dense engines consume exactly the fused engine's K-lane draws, so
+    conformance holds bitwise under fanout.
+    """
+    base = jnp.zeros((lanes.shape[0], n), lanes.dtype)
+    rows = jnp.arange(lanes.shape[0], dtype=jnp.int32)[:, None]
+    return base.at[rows, nbr].set(lanes, unique_indices=True)
+
+
+def _expand_rows_dense(compact, row_ids, n: int):
+    """Scatter (R, ...) compact reader-row draws into dense (n, ...) rows.
+
+    ``row_ids`` are the plan's raw slot ids — dead (out-of-range) slots drop
+    out of the scatter; rows not covered by a live slot stay False and are
+    never consumed (non-reader rows are don't-care in every engine).
+    """
+    base = jnp.zeros((n,) + compact.shape[1:], compact.dtype)
+    return base.at[row_ids].set(compact, mode="drop", unique_indices=True)
+
+
+def _delivery_mask_dense(cfg: SimConfig, channel, k_mask, nbr):
+    """The tick's dense (N, n) write-delivery mask under the new schedule:
+    a dense draw when gossip is dense, the expanded K-lane draw under
+    fanout.  Callers must have checked `_needs_delivery_mask`."""
+    n = cfg.n_nodes
+    if nbr is None:
+        return _loss_mask(cfg, channel, k_mask, (n, n))
+    lanes = _loss_mask(cfg, channel, k_mask, (n, cfg.workload.fanout))
+    return _expand_lanes_dense(lanes, nbr, n)
+
+
+def _response_mask_compact(cfg: SimConfig, channel, k_resp, slot_nid, nbr):
+    """The tick's response-loss draw over reader-compaction rows.
+
+    Returns (R, n) dense-columns when gossip is dense, else (R, K) neighbor
+    lanes (lane j = responder ``nbr[slot_nid, j]``).  None when loss is off.
+    """
+    if cfg.loss_model == "none":
+        return None
+    r = slot_nid.shape[0]
+    cols = cfg.n_nodes if nbr is None else cfg.workload.fanout
+    return _loss_mask(cfg, channel, k_resp, (r, cols), receivers=slot_nid)
+
+
+def _response_mask_dense(cfg: SimConfig, channel, plan, nbr):
+    """Dense (n, n) [reader, responder] response mask for the per-pass
+    engines: the compact draw expanded by scatter, with the fanout
+    neighborhood restriction baked in (non-neighbor responders False).
+    Under fanout with loss off this is the pure neighborhood mask.  None
+    means "apply no mask" (dense, loss off)."""
+    n = cfg.n_nodes
+    compact = _response_mask_compact(cfg, channel, plan.k_resp, plan.slot_nid, nbr)
+    if nbr is None:
+        if compact is None:
+            return None
+        return _expand_rows_dense(compact, plan.slot_id, n)
+    if compact is None:
+        lanes = jnp.ones((plan.slot_nid.shape[0], cfg.workload.fanout), bool)
+    else:
+        lanes = compact
+    dense_lanes = _expand_lanes_dense(lanes, nbr[plan.slot_nid], n)  # (R, n)
+    return _expand_rows_dense(dense_lanes, plan.slot_id, n)
 
 
 def _resolve_backstop(queue: wb.WriteQueue, store: bs.StoreState,
@@ -350,14 +468,22 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
     m = dataclasses.replace(m, writes_gen=n_writes)
 
     # ---- 2. fog broadcast under the loss model ----------------------------
-    channel, delivered = _delivery_mask(cfg, state.channel, plan.k_deliver, (n, n))
-    if spec.has_churn:
-        delivered = delivered & online[:, None]  # offline nodes hear nothing
+    # New schedule (DESIGN.md §9): the channel advances once; the delivery
+    # mask is drawn only when the sweep/merge consumes it, K-compact under
+    # fanout.
+    nbr = _neighbor_index(cfg)
+    channel, k_dmask = _advance_channel(cfg, state.channel, plan.k_deliver)
+    if _needs_delivery_mask(cfg):
+        delivered = _delivery_mask_dense(cfg, channel, k_dmask, nbr)
+        if spec.has_churn:
+            delivered = delivered & online[:, None]  # offline nodes hear nothing
+    else:
+        delivered = None  # write-once directory: provably unused
     n_coh = jnp.int32(0)
     if cfg.insert_policy == "directory":
         for rows in rows_waves:
             # Origin-resident payload via ONE batched upsert per wave.
-            caches, _ev = insert_rows(caches, rows, t)
+            caches, _ev = insert_rows(caches, rows, t, backend=cfg.probe_backend)
             if spec.mutable:
                 # The scenario can re-write keys: run the LIVE batched
                 # coherence sweep (hearers update resident older copies in
@@ -407,49 +533,105 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
     keys_q = r_keys[r_gidx]
     sidx_q = (keys_q % jnp.uint32(cfg.cache_sets)).astype(jnp.int32)
 
-    # 4a+4b fused: ONE probe of the R queries against all C caches serves
-    # the reader's local check (its own lane), the fog broadcast query, and
-    # the LRU-touch scatter.
-    hit_cq, way_cq, ts_cq, payload_of = _probe_all_caches(cfg, caches, keys_q, sidx_q)
-
     slots = jnp.arange(r_slots)
-    hit_local_slot = hit_cq[r_gidx, slots] & slot_ok               # (R,)
-    need_fog_slot = slot_ok & ~hit_local_slot
+    if nbr is None:
+        # 4a+4b fused (dense): ONE probe of the R queries against all C
+        # caches serves the reader's local check (its own lane), the fog
+        # broadcast query, and the LRU-touch scatter.
+        hit_cq, way_cq, ts_cq, payload_of = _probe_all_caches(
+            cfg, caches, keys_q, sidx_q
+        )
 
-    # Response loss: each responder's reply may be lost independently.  The
-    # (n, n) draw matches the seed PRNG stream exactly; only the reader rows
-    # are consumed.
-    hit_fog_cq = hit_cq
-    if cfg.loss_model != "none":
-        _, resp_mask = _delivery_mask(cfg, channel, plan.k_resp, (n, n))
-        hit_fog_cq = hit_fog_cq & resp_mask[r_gidx, :].T           # (C, R)
-    if spec.has_churn:
-        hit_fog_cq = hit_fog_cq & online[:, None]                  # silent offline
-    hit_fog_cq = hit_fog_cq & need_fog_slot[None, :]
-    ts_fog = jnp.where(hit_fog_cq, ts_cq, -1)
+        hit_local_slot = hit_cq[r_gidx, slots] & slot_ok           # (R,)
+        need_fog_slot = slot_ok & ~hit_local_slot
+        ts_local_slot = ts_cq[r_gidx, slots]
 
-    best_c = jnp.argmax(ts_fog, axis=0)                            # (R,) ties → lowest node id
-    fog_hit_slot = jnp.any(hit_fog_cq, axis=0)
-    best_ts_slot = jnp.where(fog_hit_slot, ts_fog[best_c, slots], -1)
-    best_payload_slot = payload_of(best_c, slots)                  # (R, D)
+        # Response loss: each responder's reply may be lost independently.
+        # The draw covers only the R reader-compaction rows (DESIGN.md §9).
+        hit_fog_cq = hit_cq
+        resp_rq = _response_mask_compact(cfg, channel, plan.k_resp, r_gidx, nbr)
+        if resp_rq is not None:
+            hit_fog_cq = hit_fog_cq & resp_rq.T                    # (C, R)
+        if spec.has_churn:
+            hit_fog_cq = hit_fog_cq & online[:, None]              # silent offline
+        hit_fog_cq = hit_fog_cq & need_fog_slot[None, :]
+        ts_fog = jnp.where(hit_fog_cq, ts_cq, -1)
 
-    # LRU refresh in ONE scatter: the reader's local hit plus every
-    # responder that served a query.  The scatter-max runs along the SHARED
-    # query set-index vector (R slice-updates, each vectorized over all C
-    # caches) with the per-cache way variability moved into the VALUES —
-    # XLA serializes per-element (C, R)-indexed scatters on CPU.
-    touch_cq = hit_fog_cq.at[r_gidx, slots].max(hit_local_slot)
-    touch_w = touch_cq[:, :, None] & (
-        jax.lax.iota(jnp.int32, cfg.cache_ways)[None, None, :]
-        == way_cq[:, :, None]
-    )
-    caches = dataclasses.replace(
-        caches,
-        last_use=caches.last_use.at[:, sidx_q].max(jnp.where(touch_w, t, -1)),
-    )
+        best_c = jnp.argmax(ts_fog, axis=0)                        # (R,) ties → lowest node id
+        fog_hit_slot = jnp.any(hit_fog_cq, axis=0)
+        best_ts_slot = jnp.where(fog_hit_slot, ts_fog[best_c, slots], -1)
+        best_payload_slot = payload_of(best_c, slots)              # (R, D)
+
+        # LRU refresh in ONE scatter: the reader's local hit plus every
+        # responder that served a query.  The scatter-max runs along the
+        # SHARED query set-index vector (R slice-updates, each vectorized
+        # over all C caches) with the per-cache way variability moved into
+        # the VALUES — XLA serializes per-element (C, R)-indexed scatters
+        # on CPU.
+        touch_cq = hit_fog_cq.at[r_gidx, slots].max(hit_local_slot)
+        touch_w = touch_cq[:, :, None] & (
+            jax.lax.iota(jnp.int32, cfg.cache_ways)[None, None, :]
+            == way_cq[:, :, None]
+        )
+        caches = dataclasses.replace(
+            caches,
+            last_use=caches.last_use.at[:, sidx_q].max(jnp.where(touch_w, t, -1)),
+        )
+
+        n_responses = jnp.sum(hit_fog_cq.astype(jnp.int32))
+    else:
+        # 4a+4b fused (fanout): the reader probes ONLY itself plus its K
+        # ring neighbors — (R, K+1) lanes, lane 0 local — so the probe,
+        # response loss, winner election, payload gather and LRU touch are
+        # all O(R·K), never O(N²).  Ties break by lane (nearest ring
+        # offset) instead of lowest node id: unobservable, because
+        # same-(key, ts) payloads are value-identical by construction.
+        cols = jnp.concatenate([r_gidx[:, None], nbr[r_gidx]], axis=1)
+        tags_l = caches.tags[cols, sidx_q[:, None]]                # (R, K+1, W)
+        valid_l = caches.valid[cols, sidx_q[:, None]]
+        match_l = valid_l & (tags_l == keys_q[:, None, None])
+        hit_l = jnp.any(match_l, axis=-1)                          # (R, K+1)
+        way_l = jnp.argmax(match_l, axis=-1).astype(jnp.int32)     # first-way wins
+        ts_raw_l = jnp.take_along_axis(
+            caches.data_ts[cols, sidx_q[:, None]], way_l[..., None], axis=-1
+        )[..., 0]
+
+        hit_local_slot = hit_l[:, 0] & slot_ok                     # (R,)
+        need_fog_slot = slot_ok & ~hit_local_slot
+        ts_local_slot = jnp.where(hit_l[:, 0], ts_raw_l[:, 0], -1)
+
+        hit_fog_l = hit_l[:, 1:]                                   # (R, K)
+        resp_l = _response_mask_compact(cfg, channel, plan.k_resp, r_gidx, nbr)
+        if resp_l is not None:
+            hit_fog_l = hit_fog_l & resp_l
+        if spec.has_churn:
+            hit_fog_l = hit_fog_l & online[cols[:, 1:]]            # silent offline
+        hit_fog_l = hit_fog_l & need_fog_slot[:, None]
+        ts_fog_l = jnp.where(hit_fog_l, ts_raw_l[:, 1:], -1)
+
+        best_lane = jnp.argmax(ts_fog_l, axis=1)                   # (R,)
+        fog_hit_slot = jnp.any(hit_fog_l, axis=1)
+        best_ts_slot = jnp.where(fog_hit_slot, ts_fog_l[slots, best_lane], -1)
+        best_payload_slot = caches.data[
+            cols[slots, 1 + best_lane], sidx_q, way_l[slots, 1 + best_lane]
+        ]                                                          # (R, D)
+
+        # LRU refresh: flat scatter-max over the touched (cache, set, way)
+        # cells — O(R·K) updates, duplicates merge under max.
+        touch_l = jnp.concatenate([hit_local_slot[:, None], hit_fog_l], axis=1)
+        flat = (cols * cfg.cache_sets + sidx_q[:, None]) * cfg.cache_ways + way_l
+        oob = n * cfg.cache_sets * cfg.cache_ways
+        flat = jnp.where(touch_l, flat, oob)
+        caches = dataclasses.replace(
+            caches,
+            last_use=caches.last_use.reshape(-1)
+            .at[flat.reshape(-1)].max(t, mode="drop")
+            .reshape(caches.last_use.shape),
+        )
+
+        n_responses = jnp.sum(hit_fog_l.astype(jnp.int32))
 
     n_fog_queries = jnp.sum(need_fog_slot.astype(jnp.int32))
-    n_responses = jnp.sum(hit_fog_cq.astype(jnp.int32))
 
     # 4c. writer-buffer forwarding, then the backing store (§VI).
     healthy = bs.store_healthy(store_in, t)
@@ -516,14 +698,14 @@ def sim_tick(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, TickMet
         valid=fill_valid,
         dirty=jnp.zeros((n,), bool),
     )
-    caches, _ev = insert_rows(caches, fill_lines, t)
+    caches, _ev = insert_rows(caches, fill_lines, t, backend=cfg.probe_backend)
 
     # 4e. staleness: served reads whose version is older than the newest
     # write of that key (the soft-coherence lag the paper accepts, §I.A.a).
     if spec.mutable:
         served_slot = hit_local_slot | fog_hit_slot | queue_hit_slot | found_slot
         got_ts_slot = jnp.where(
-            hit_local_slot, ts_cq[r_gidx, slots],
+            hit_local_slot, ts_local_slot,
             jnp.where(fog_hit_slot, best_ts_slot, served_ts_slot),
         )
         truth_slot = latest_ts[jnp.clip(kids_q, 0, spec.key_universe - 1)]

@@ -36,12 +36,16 @@ from repro.core.metrics import TickMetrics
 from repro.core.simulator import (
     SimConfig,
     SimState,
-    _delivery_mask,
+    _advance_channel,
+    _delivery_mask_dense,
     _insert_own_rows,
     _merge_replicate,
+    _needs_delivery_mask,
+    _neighbor_index,
     _payload_for,
     _resolve_backstop,
     _resolve_backstop_keyed,
+    _response_mask_dense,
 )
 
 
@@ -73,7 +77,16 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
     m = dataclasses.replace(m, writes_gen=n_writes)
 
     # ---- 2. fog broadcast under the loss model ----------------------------
-    channel, delivered = _delivery_mask(cfg, state.channel, plan.k_deliver, (n, n))
+    # R-compact schedule (DESIGN.md §9): one channel advance per tick; the
+    # delivery mask is drawn only when a consumer exists.  On the write-once
+    # directory path the retained sweep below is a counted no-op, so the
+    # full-delivery placeholder is semantically identical to any draw.
+    nbr = _neighbor_index(cfg)
+    channel, k_dmask = _advance_channel(cfg, state.channel, plan.k_deliver)
+    if _needs_delivery_mask(cfg):
+        delivered = _delivery_mask_dense(cfg, channel, k_dmask, nbr)
+    else:
+        delivered = jnp.ones((n, n), bool)
     if spec.has_churn:
         delivered = delivered & online[:, None]
     n_coh = jnp.int32(0)
@@ -144,10 +157,14 @@ def sim_tick_ref(cfg: SimConfig, state: SimState, _=None) -> tuple[SimState, Tic
     # axes: (C caches, Q queries ...) -> transpose to (Q, C)
     hits_qc = hits_qc.T                                                    # (Q, C)
     ts_qc = ts_qc.T
-    # Response loss: each responder's reply may be lost independently.
-    if cfg.loss_model != "none":
-        _, resp_mask = _delivery_mask(cfg, channel, plan.k_resp, (n, n))
-        hits_qc = hits_qc & resp_mask
+    # Response loss: each responder's reply may be lost independently.  The
+    # draw covers only the R reader-compaction rows (K neighbor lanes under
+    # fanout) and is expanded to this engine's dense (n, n) [reader,
+    # responder] view by scatter — non-reader rows are don't-care because
+    # every consumer below gates on ``need_fog`` (DESIGN.md §9).
+    resp_dense = _response_mask_dense(cfg, channel, plan, nbr)
+    if resp_dense is not None:
+        hits_qc = hits_qc & resp_dense
         ts_qc = jnp.where(hits_qc, ts_qc, -1)
     if spec.has_churn:
         hits_qc = hits_qc & online[None, :]   # offline responders are silent

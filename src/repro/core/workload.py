@@ -157,8 +157,15 @@ class WorkloadSpec:
     poisson_rate: float = 1.0        # poisson: mean write requests / node / tick
     max_requests_per_tick: int = 1   # poisson: static padded lane count P
     trace: Optional[TraceSpec] = None  # popularity="trace": what to replay
+    fanout: Optional[int] = None     # K-bounded gossip neighborhood; None = dense
 
     def __post_init__(self):
+        if self.fanout is not None and self.fanout < 1:
+            raise ValueError(
+                f"fanout must be >= 1 (got {self.fanout}): each node gossips "
+                "with a ring neighborhood of K distinct peers — use "
+                "fanout=None for dense all-pairs gossip"
+            )
         if self.popularity == "trace":
             if self.trace is None:
                 raise ValueError(
@@ -464,6 +471,40 @@ def validate_run(cfg, ticks: int) -> None:
                 f"extend the trace (TraceSpec(length=...) for synthetic "
                 f"sources, or regenerate the npz) or shorten the run"
             )
+    if spec.fanout is not None:
+        if spec.fanout > cfg.n_nodes - 1:
+            raise ValueError(
+                f"fanout={spec.fanout} exceeds the {cfg.n_nodes - 1} distinct "
+                f"peers of an N={cfg.n_nodes} fog: the ring neighborhood "
+                "excludes the node itself — lower fanout to <= N-1 or use "
+                "fanout=None for dense gossip"
+            )
+        r = cfg.readers_per_tick
+        if r < 1:
+            raise ValueError(
+                f"fanout={spec.fanout} needs reader compaction, but "
+                f"readers_per_tick={r}: the (R, K) response-loss draw and the "
+                "K-lane probe are indexed by reader slots — check read_period "
+                f"vs n_nodes={cfg.n_nodes}"
+            )
+
+
+def neighbor_table(n: int, k: int) -> np.ndarray:
+    """Static ring neighborhood: ``nbr[i, j] = (i + off_j) mod n``.
+
+    Offsets alternate +1, -1, +2, -2, ... — for any ``k <= n-1`` they are
+    distinct and nonzero mod n, so every row holds ``k`` distinct peers and
+    never the node itself.  Host-side numpy and deterministic in (n, k): the
+    table is a jit-time constant shared verbatim by all three engines, so
+    conformance does not depend on any PRNG stream.
+    """
+    if not 1 <= k <= n - 1:
+        raise ValueError(f"neighbor_table needs 1 <= k <= n-1 (got k={k}, n={n})")
+    offs = np.asarray(
+        [(j // 2 + 1) * (1 if j % 2 == 0 else -1) for j in range(k)], np.int64
+    )
+    nbr = (np.arange(n, dtype=np.int64)[:, None] + offs[None, :]) % n
+    return nbr.astype(np.int32)
 
 
 def save_trace_npz(path: str, key_ids: np.ndarray, ops: np.ndarray) -> None:

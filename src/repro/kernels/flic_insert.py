@@ -1,0 +1,195 @@
+"""Pallas TPU kernel: batched FLIC one-line-per-node upsert.
+
+The fused engine's two remaining per-tick upsert scatters — the own-row
+wave insert and the reader fill (``flic.insert_rows`` at both ``sim_tick``
+call sites) — write all EIGHT cache tables through one flat scatter each.
+This kernel fuses the whole upsert into one VMEM-pinned pass: way select
+(first-matching-way, first-invalid-else-LRU victim), the strictly-newer
+timestamp gate, and the eight per-field row writes, with every table
+buffer donated (``input_output_aliases``), so the simulator's scan reuses
+the cache-state memory with no per-field scatter traffic.
+
+TPU mapping (DESIGN.md §2/§4): the grid walks node blocks of ``N_BLOCK``
+nodes; each grid step holds its (N_BLOCK, S, W[, D]) table blocks in VMEM
+(~100 KB at simulator scale), copies them input→output once, then each
+node touches exactly its own probed set row via dynamic slices.  Nodes
+touch disjoint rows, so the sequential node loop has no ordering hazard
+and the pass is bit-identical to the inline ``insert_rows`` scatters and
+the ``kernels/ref.py`` oracle for arbitrary inputs.
+
+Eviction records are NOT produced: both engine call sites discard them,
+and skipping the displaced-line gather is what lets all eight tables be
+donated whole (``flic.insert_rows`` documents the kernel-path contract).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Nodes per grid step.  VMEM per step is N_BLOCK * S * W * (6 * 4B + D * 4B)
+# doubled for donation — ~90 KB at the default geometry (S=50, W=4, D=8) —
+# sized for a real (non-interpret) lowering.  The wrapper drops to the
+# largest divisor of N at or under this bound, so no node padding is needed.
+N_BLOCK = 8
+
+
+def _node_block(n: int) -> int:
+    for nb in range(min(N_BLOCK, n), 0, -1):
+        if n % nb == 0:
+            return nb
+    return 1
+
+
+def _kernel(keys_ref, sidx_ref, line_ts_ref, line_origin_ref, line_dirty_ref,
+            live_ref, now_ref,
+            tags_in, ts_in, ins_in, org_in, val_in, dir_in, lu_in,
+            line_data_ref, data_in,
+            tags_out, ts_out, ins_out, org_out, val_out, dir_out, lu_out,
+            data_out):
+    nb = keys_ref.shape[0]
+    w = tags_in.shape[-1]
+
+    # Copy this node block input -> output (identity under donation), then
+    # the node loop reads and writes the OUT refs only: each node's single
+    # row write happens after its reads, and rows are disjoint across nodes.
+    tags_out[...] = tags_in[...]
+    ts_out[...] = ts_in[...]
+    ins_out[...] = ins_in[...]
+    org_out[...] = org_in[...]
+    val_out[...] = val_in[...]
+    dir_out[...] = dir_in[...]
+    lu_out[...] = lu_in[...]
+    data_out[...] = data_in[...]
+
+    now = now_ref[0]
+    int_max = jnp.iinfo(jnp.int32).max
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, w), 1)          # (1, W)
+
+    def body(j, _):
+        key = keys_ref[j]
+        s = sidx_ref[j]
+        lts = line_ts_ref[j]
+        lorg = line_origin_ref[j]
+        ldir = line_dirty_ref[j]
+        lv = live_ref[j] != 0
+        idx = (pl.ds(j, 1), pl.ds(s, 1), slice(None))
+        row_tags = pl.load(tags_out, idx)[0]                       # (1, W)
+        row_ts = pl.load(ts_out, idx)[0]
+        row_ins = pl.load(ins_out, idx)[0]
+        row_org = pl.load(org_out, idx)[0]
+        row_val = pl.load(val_out, idx)[0]
+        row_dir = pl.load(dir_out, idx)[0]
+        row_use = pl.load(lu_out, idx)[0]
+
+        valid = row_val != 0
+        match = valid & (row_tags == key)
+        present = jnp.any(match)
+        present_way = jnp.argmax(match, axis=1)                    # first way
+        any_inv = jnp.any(~valid)
+        inv_way = jnp.argmax(~valid, axis=1)                       # first invalid
+        use = jnp.where(valid, row_use, int_max)
+        lru_way = jnp.argmin(use, axis=1)
+        victim = jnp.where(any_inv, inv_way, lru_way)
+        way = jnp.where(present, present_way, victim)              # (1,)
+
+        sel = lane == way[:, None]                                 # (1, W)
+        old_ts = jnp.sum(jnp.where(sel, row_ts, 0))                # one-hot pick
+        stale = present & (lts <= old_ts)
+        wr = sel & (lv & ~stale)                                   # (1, W)
+
+        pl.store(tags_out, idx, jnp.where(wr, key, row_tags)[None])
+        pl.store(ts_out, idx, jnp.where(wr, lts, row_ts)[None])
+        pl.store(ins_out, idx, jnp.where(wr, now, row_ins)[None])
+        pl.store(org_out, idx, jnp.where(wr, lorg, row_org)[None])
+        pl.store(val_out, idx, jnp.where(wr, 1, row_val)[None])
+        pl.store(dir_out, idx, jnp.where(wr, ldir, row_dir)[None])
+        pl.store(lu_out, idx, jnp.where(wr, now, row_use)[None])
+
+        didx = (pl.ds(j, 1), pl.ds(s, 1), slice(None), slice(None))
+        row_data = pl.load(data_out, didx)[0]                      # (1, W, D)
+        ld = line_data_ref[j, :]                                   # (D,)
+        pl.store(data_out, didx,
+                 jnp.where(wr[:, :, None], ld[None, None, :], row_data)[None])
+        return 0
+
+    jax.lax.fori_loop(0, nb, body, 0)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def flic_insert_pallas(
+    tags: jax.Array,         # (N, S, W) int32
+    data_ts: jax.Array,      # (N, S, W) int32
+    ins_ts: jax.Array,       # (N, S, W) int32
+    origin: jax.Array,       # (N, S, W) int32
+    valid: jax.Array,        # (N, S, W) bool
+    dirty: jax.Array,        # (N, S, W) bool
+    last_use: jax.Array,     # (N, S, W) int32
+    data: jax.Array,         # (N, S, W, D) f32
+    keys: jax.Array,         # (N,) int32
+    sidx: jax.Array,         # (N,) int32
+    line_ts: jax.Array,      # (N,) int32
+    line_origin: jax.Array,  # (N,) int32
+    line_dirty: jax.Array,   # (N,) bool
+    live: jax.Array,         # (N,) bool — lines.valid; False lanes are no-ops
+    line_data: jax.Array,    # (N, D) f32
+    now: jax.Array,          # int32 scalar
+    interpret: bool = True,
+):
+    n, s, w = tags.shape
+    d = data.shape[-1]
+    nb = _node_block(n)
+    grid = (n // nb,)
+
+    nodewise = pl.BlockSpec((nb,), lambda i: (i,))
+    tab = pl.BlockSpec((nb, s, w), lambda i: (i, 0, 0))
+    tab3 = pl.BlockSpec((nb, s, w, d), lambda i: (i, 0, 0, 0))
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            nodewise,                               # keys
+            nodewise,                               # sidx
+            nodewise,                               # line_ts
+            nodewise,                               # line_origin
+            nodewise,                               # line_dirty
+            nodewise,                               # live
+            pl.BlockSpec((1,), lambda i: (0,)),     # now
+            tab,                                    # tags      (donated)
+            tab,                                    # data_ts   (donated)
+            tab,                                    # ins_ts    (donated)
+            tab,                                    # origin    (donated)
+            tab,                                    # valid     (donated)
+            tab,                                    # dirty     (donated)
+            tab,                                    # last_use  (donated)
+            pl.BlockSpec((nb, d), lambda i: (i, 0)),  # line_data
+            tab3,                                   # data      (donated)
+        ],
+        out_specs=[tab, tab, tab, tab, tab, tab, tab, tab3],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, s, w), jnp.int32),   # tags
+            jax.ShapeDtypeStruct((n, s, w), jnp.int32),   # data_ts
+            jax.ShapeDtypeStruct((n, s, w), jnp.int32),   # ins_ts
+            jax.ShapeDtypeStruct((n, s, w), jnp.int32),   # origin
+            jax.ShapeDtypeStruct((n, s, w), jnp.int32),   # valid
+            jax.ShapeDtypeStruct((n, s, w), jnp.int32),   # dirty
+            jax.ShapeDtypeStruct((n, s, w), jnp.int32),   # last_use
+            jax.ShapeDtypeStruct((n, s, w, d), data.dtype),
+        ],
+        input_output_aliases={
+            7: 0, 8: 1, 9: 2, 10: 3, 11: 4, 12: 5, 13: 6, 15: 7,
+        },
+        interpret=interpret,
+    )(
+        keys, sidx, line_ts, line_origin,
+        line_dirty.astype(jnp.int32), live.astype(jnp.int32),
+        jnp.full((1,), jnp.asarray(now, jnp.int32)),
+        tags, data_ts, ins_ts, origin,
+        valid.astype(jnp.int32), dirty.astype(jnp.int32), last_use,
+        line_data, data,
+    )
+    (n_tags, n_ts, n_ins, n_org, n_val, n_dir, n_lu, n_data) = out
+    return (n_tags, n_ts, n_ins, n_org, n_val.astype(bool),
+            n_dir.astype(bool), n_lu, n_data)

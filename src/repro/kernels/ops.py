@@ -17,6 +17,8 @@ import os
 import jax
 
 from repro.kernels import ref
+from repro.kernels.flic_insert import N_BLOCK as FLIC_INSERT_BLOCK
+from repro.kernels.flic_insert import flic_insert_pallas
 from repro.kernels.flic_lookup import Q_BLOCK as FLIC_LOOKUP_BLOCK
 from repro.kernels.flic_lookup import flic_lookup_pallas
 from repro.kernels.flic_merge import flic_merge_pallas
@@ -57,6 +59,24 @@ def flic_update(tags, data_ts, valid, last_use, data, keys, sidx, row_ts,
     return flic_update_pallas(
         tags, data_ts, valid, last_use, data, keys, sidx, row_ts,
         row_data, live, now, interpret=(mode != "pallas"),
+    )
+
+
+def flic_insert(tags, data_ts, ins_ts, origin, valid, dirty, last_use, data,
+                keys, sidx, line_ts, line_origin, line_dirty, live, line_data,
+                now, backend: str | None = None):
+    """Batched one-line-per-node upsert; returns the eight updated tables —
+    see ref.flic_insert_ref for the exact contract."""
+    mode = backend or _mode()
+    if mode == "xla":
+        return ref.flic_insert_ref(
+            tags, data_ts, ins_ts, origin, valid, dirty, last_use, data,
+            keys, sidx, line_ts, line_origin, line_dirty, live, line_data, now,
+        )
+    return flic_insert_pallas(
+        tags, data_ts, ins_ts, origin, valid, dirty, last_use, data,
+        keys, sidx, line_ts, line_origin, line_dirty, live, line_data, now,
+        interpret=(mode != "pallas"),
     )
 
 

@@ -92,6 +92,88 @@ def flic_update_ref(
 
 
 # ---------------------------------------------------------------------------
+# flic_insert: batched one-line-per-node upsert across all cache shards
+# ---------------------------------------------------------------------------
+
+def flic_insert_ref(
+    tags: jax.Array,         # (N, S, W) int32 (bitcast uint32 keys)
+    data_ts: jax.Array,      # (N, S, W) int32
+    ins_ts: jax.Array,       # (N, S, W) int32
+    origin: jax.Array,       # (N, S, W) int32
+    valid: jax.Array,        # (N, S, W) bool
+    dirty: jax.Array,        # (N, S, W) bool
+    last_use: jax.Array,     # (N, S, W) int32
+    data: jax.Array,         # (N, S, W, D) f32
+    keys: jax.Array,         # (N,) int32 one incoming line key per node
+    sidx: jax.Array,         # (N,) int32 precomputed set index
+    line_ts: jax.Array,      # (N,) int32
+    line_origin: jax.Array,  # (N,) int32
+    line_dirty: jax.Array,   # (N,) bool
+    live: jax.Array,         # (N,) bool — lines.valid; False lanes are no-ops
+    line_data: jax.Array,    # (N, D) f32
+    now: jax.Array,          # int32 scalar LRU/insert stamp
+):
+    """Batched upsert, one line per node (``flic.insert_rows`` semantics).
+
+    Way select: first matching valid way if the key is present, else the
+    first invalid way, else the LRU way.  A present line is overwritten only
+    by a STRICTLY newer timestamp (soft coherence, paper §I.A.a); dead lanes
+    (``live`` False) never write.  Returns the eight updated tables
+    (tags, data_ts, ins_ts, origin, valid, dirty, last_use, data) with
+    valid/dirty as bool.  No eviction record is produced — see
+    ``flic.insert_rows`` for the kernel-path contract.
+    """
+    tags, data_ts, ins_ts, origin, valid, dirty, last_use, data = (
+        jnp.asarray(x)
+        for x in (tags, data_ts, ins_ts, origin, valid, dirty, last_use, data)
+    )
+    line_ts = jnp.asarray(line_ts)
+    n, _, w_ways = tags.shape
+    rows = jnp.arange(n)
+    tags_r = tags[rows, sidx]                            # (N, W)
+    valid_r = valid[rows, sidx]
+    use_r = last_use[rows, sidx]
+
+    match = valid_r & (tags_r == keys[:, None])
+    present = jnp.any(match, axis=1)
+    present_way = jnp.argmax(match, axis=1)              # first matching way
+    any_invalid = jnp.any(~valid_r, axis=1)
+    invalid_way = jnp.argmax(~valid_r, axis=1)           # first invalid way
+    use = jnp.where(valid_r, use_r, jnp.iinfo(jnp.int32).max)
+    lru_way = jnp.argmin(use, axis=1)
+    victim_way = jnp.where(any_invalid, invalid_way, lru_way)
+    way = jnp.where(present, present_way, victim_way)    # (N,)
+
+    old_ts = data_ts[rows, sidx, way]
+    stale = present & (line_ts <= old_ts)
+    do_write = jnp.asarray(live) & ~stale
+    onehot = do_write[:, None] & (
+        jnp.arange(w_ways, dtype=jnp.int32)[None, :] == way[:, None]
+    )                                                    # (N, W)
+    now = jnp.asarray(now, jnp.int32)
+
+    def wr(field, value):
+        row = field[rows, sidx]                          # (N, W)
+        new = jnp.where(onehot, value[:, None].astype(field.dtype), row)
+        return field.at[rows, sidx].set(new, unique_indices=True)
+
+    return (
+        wr(tags, keys),
+        wr(data_ts, line_ts),
+        wr(ins_ts, jnp.full((n,), now)),
+        wr(origin, line_origin),
+        wr(valid, jnp.ones((n,), bool)),
+        wr(dirty, jnp.asarray(line_dirty)),
+        wr(last_use, jnp.full((n,), now)),
+        data.at[rows, sidx].set(
+            jnp.where(onehot[..., None], line_data[:, None, :],
+                      data[rows, sidx]),
+            unique_indices=True,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
 # flic_merge: soft-coherence merge of two aligned cache shards
 # ---------------------------------------------------------------------------
 

@@ -114,6 +114,14 @@ CASES: dict[str, ConformanceCase] = {
     "poisson": _case(SCENARIOS["poisson"], 100, _MUT),
     "trace": _case(SCENARIOS["trace_ycsb"], 120, _MUT),
     "stream_churn": _case(SCENARIOS["stream_churn"], 130, ("churn_rejoins",)),
+    # -- fan-out-bounded gossip (DESIGN.md §9): the fused K-lane probe vs the
+    # reference/distributed dense expansion of the same compact draws, with
+    # response loss restricted to the ring neighborhood ---------------------
+    "fanout_topk": _case(
+        WorkloadSpec(popularity="zipf", key_universe=2048, zipf_alpha=0.9,
+                     fanout=5),
+        110, _MUT,
+    ),
     # -- loss-model / insert-policy variants --------------------------------
     "paper_ge": _case(
         SCENARIOS["paper"], 70, loss_model="gilbert_elliott",

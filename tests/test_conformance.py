@@ -26,7 +26,8 @@ GROUPS = {
     "outages": ("paper_outage", "zipf_outage", "churn_outage", "paper_replicate",
                 "zipf_thinned"),
     # plan-stage workload axes (Poisson lanes, trace replay, stream×churn)
-    "plans": ("poisson", "trace", "stream_churn"),
+    # plus the K-bounded gossip neighborhood (DESIGN.md §9)
+    "plans": ("poisson", "trace", "stream_churn", "fanout_topk"),
 }
 
 

@@ -1,0 +1,180 @@
+"""Properties of K-bounded gossip (DESIGN.md §9): masked-gossip hit/loss
+conservation and the fan-out contract.
+
+Three layers:
+
+* ``neighbor_table`` — the static ring neighborhood all three engines share
+  verbatim: K distinct peers per node, never the node itself, deterministic
+  in (n, k) with no PRNG.
+* probe-level conservation — the fused engine's K-lane gather and the dense
+  all-pairs probe are the SAME tag-match semantics restricted to the
+  neighborhood: lane hit (r, j) ⟺ dense hit at (reader r, responder
+  nbr[r, j]), hence the K-masked hit set is a subset of the dense hit set.
+* engine-level bit-equality — with ``loss_model="none"`` (no response draws)
+  and no churn, ``fanout = N-1`` covers every peer, so the full TickMetrics
+  series must be bit-identical to dense ``fanout=None`` gossip: the lane
+  formulation changes only the election ORDER, and payloads are pure in
+  (key, ts) (``workload.versioned_payload``), making the tie-break
+  unobservable.
+
+Plus the ``validate_run`` / ``WorkloadSpec`` rejection contract for fan-out
+values that break the neighborhood or reader compaction.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache_state import empty_cache
+from repro.core.simulator import SimConfig, run_any_engine
+from repro.core.workload import SCENARIOS, WorkloadSpec, neighbor_table, validate_run
+from conformance import assert_series_identical
+
+
+# ---------------------------------------------------------------------------
+# neighbor_table: the shared static neighborhood
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "n,k", [(2, 1), (5, 4), (8, 3), (16, 15), (17, 8), (100, 7)]
+)
+def test_neighbor_table_is_a_valid_neighborhood(n, k):
+    nbr = neighbor_table(n, k)
+    assert nbr.shape == (n, k) and nbr.dtype == np.int32
+    assert (0 <= nbr).all() and (nbr < n).all()
+    own = np.arange(n)[:, None]
+    assert (nbr != own).all(), "a node must never gossip with itself"
+    for i in range(n):
+        assert len(set(nbr[i])) == k, f"row {i} repeats a peer"
+
+
+def test_neighbor_table_is_deterministic_and_ring_shifted():
+    a, b = neighbor_table(12, 5), neighbor_table(12, 5)
+    np.testing.assert_array_equal(a, b)
+    # ring structure: every row is row 0 shifted by the node id (mod n)
+    np.testing.assert_array_equal(a, (a[0][None, :] + np.arange(12)[:, None]) % 12)
+
+
+@pytest.mark.parametrize("n,k", [(8, 0), (8, 8), (8, -1), (1, 1)])
+def test_neighbor_table_rejects_degenerate_k(n, k):
+    with pytest.raises(ValueError, match="neighbor_table needs 1 <= k <= n-1"):
+        neighbor_table(n, k)
+
+
+# ---------------------------------------------------------------------------
+# probe-level conservation: K-lane gather ⟺ dense probe on the neighborhood
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_lane_hits_are_dense_hits_restricted_to_neighbors(seed):
+    """For arbitrary cache contents: the fused K-lane tag match equals the
+    dense all-pairs match gathered at the neighbor columns — so every
+    K-masked (reader, responder) hit pair is also a dense hit pair, and no
+    in-neighborhood dense hit is dropped."""
+    rng = np.random.default_rng(seed)
+    n, s, w, k, r = 14, 4, 2, 6, 10
+    caches = empty_cache(s, w, 2, jnp.float32, batch=(n,))
+    occupied = rng.random((n, s, w)) < 0.6
+    pool = rng.integers(0, 50, 8, dtype=np.uint32)
+    caches = dataclasses.replace(
+        caches,
+        tags=jnp.asarray(np.where(occupied, rng.choice(pool, (n, s, w)),
+                                  0xFFFFFFFF).astype(np.uint32)),
+        valid=jnp.asarray(occupied),
+    )
+    readers = rng.permutation(n)[:r].astype(np.int32)       # distinct nodes
+    keys = rng.choice(pool, (r,)).astype(np.uint32)
+    sidx = (keys % np.uint32(s)).astype(np.int32)
+
+    tags_np = np.asarray(caches.tags)
+    valid_np = np.asarray(caches.valid)
+    # dense all-pairs probe: responder c × reader slot q
+    dense = np.any(
+        valid_np[:, sidx] & (tags_np[:, sidx] == keys[None, :, None]), axis=-1
+    )                                                        # (N, R)
+    # fused K-lane gather: reader slot q × lane j
+    nbr = neighbor_table(n, k)
+    cols = nbr[readers]                                      # (R, K)
+    lane = np.any(
+        valid_np[cols, sidx[:, None]]
+        & (tags_np[cols, sidx[:, None]] == keys[:, None, None]),
+        axis=-1,
+    )                                                        # (R, K)
+
+    np.testing.assert_array_equal(
+        lane, dense[cols, np.arange(r)[:, None]],
+        err_msg="lane hit must equal the dense hit at its neighbor column",
+    )
+    lane_pairs = {(q, int(cols[q, j])) for q, j in zip(*np.nonzero(lane))}
+    dense_pairs = {(int(q), int(c)) for c, q in zip(*np.nonzero(dense))}
+    assert lane_pairs <= dense_pairs, "K-masked hits must be ⊆ dense hits"
+
+
+# ---------------------------------------------------------------------------
+# engine-level: fanout = N-1 with no loss draws ≡ dense gossip, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["fused", "reference"])
+def test_full_fanout_without_loss_is_bitwise_dense(engine):
+    """K = N-1 covers every peer and ``loss_model="none"`` draws nothing, so
+    the lane formulation must reproduce dense gossip bit-for-bit — the
+    response election differs only in lane ORDER, unobservable because
+    same-key payloads of one tick are value-identical."""
+    n, ticks = 12, 40
+    spec = WorkloadSpec(popularity="zipf", key_universe=512, zipf_alpha=0.9)
+    base = SimConfig(n_nodes=n, cache_lines=48, loss_model="none", workload=spec)
+    _, dense = run_any_engine(base, ticks, seed=3, engine=engine)
+    lanes_cfg = dataclasses.replace(
+        base, workload=dataclasses.replace(spec, fanout=n - 1)
+    )
+    _, lanes = run_any_engine(lanes_cfg, ticks, seed=3, engine=engine)
+    assert_series_identical(dense, lanes, f"{engine}: dense vs fanout={n - 1}")
+    assert int(np.sum(np.asarray(dense.hits_fog))) > 0  # the path is live
+
+
+def test_bounded_fanout_changes_only_coverage_not_reads():
+    """Sanity floor for the K-bounded path itself: same workload, K=3 —
+    request-side metrics (reads/writes schedule) are fan-out independent,
+    and fog coverage stays live."""
+    n, ticks = 12, 40
+    spec = WorkloadSpec(popularity="zipf", key_universe=512, zipf_alpha=0.9)
+    base = SimConfig(n_nodes=n, cache_lines=48, loss_model="none", workload=spec)
+    _, dense = run_any_engine(base, ticks, seed=3, engine="fused")
+    k3 = dataclasses.replace(base, workload=dataclasses.replace(spec, fanout=3))
+    _, lanes = run_any_engine(k3, ticks, seed=3, engine="fused")
+    np.testing.assert_array_equal(np.asarray(dense.reads), np.asarray(lanes.reads))
+    np.testing.assert_array_equal(np.asarray(dense.writes_gen), np.asarray(lanes.writes_gen))
+    assert int(np.sum(np.asarray(lanes.hits_fog))) > 0
+
+
+# ---------------------------------------------------------------------------
+# validation: actionable rejection of broken fan-out values
+# ---------------------------------------------------------------------------
+
+def test_workload_spec_rejects_nonpositive_fanout():
+    with pytest.raises(ValueError, match="fanout must be >= 1"):
+        WorkloadSpec(fanout=0)
+    with pytest.raises(ValueError, match="fanout must be >= 1"):
+        WorkloadSpec(fanout=-2)
+
+
+def test_validate_run_rejects_fanout_beyond_peer_count():
+    cfg = SimConfig(n_nodes=8, workload=WorkloadSpec(fanout=8))
+    with pytest.raises(ValueError, match="exceeds the 7 distinct peers"):
+        validate_run(cfg, 10)
+    # the runner itself enforces it (every engine validates before compiling)
+    with pytest.raises(ValueError, match="exceeds the 7 distinct peers"):
+        run_any_engine(cfg, 10, seed=0, engine="fused")
+
+
+def test_validate_run_accepts_maximal_fanout():
+    cfg = SimConfig(n_nodes=8, workload=WorkloadSpec(fanout=7))
+    validate_run(cfg, 10)
+
+
+def test_scenarios_presets_accept_fanout_override():
+    """Every shipped preset stays valid when bounded to a small K (the
+    bench sweep relies on this)."""
+    for name, spec in SCENARIOS.items():
+        SimConfig(n_nodes=16, workload=dataclasses.replace(spec, fanout=4))

@@ -286,8 +286,10 @@ def test_outage_schedule_equivalent_and_forwards(spec):
         n_nodes=10, cache_lines=40, loss_prob=0.02, read_period=5,
         workload=spec, outage_schedule=((25, 30),),
     )
-    _, ref = run_sim(cfg, 80, seed=0, engine="reference")
-    _, fused = run_sim(cfg, 80, seed=0, engine="fused")
+    # seed 1: the zipf outage window forwards reads under the §9 R-compact
+    # draw schedule (seed 0's window happens to stay queue-quiet there).
+    _, ref = run_sim(cfg, 80, seed=1, engine="reference")
+    _, fused = run_sim(cfg, 80, seed=1, engine="fused")
     assert_series_identical(ref, fused)
     win = slice(25, 55)
     assert int(np.sum(np.asarray(fused.hits_queue)[win])) > 0
