@@ -1,7 +1,7 @@
 """End-to-end driver: a city-scale fog deployment, the paper's own scenario.
 
 Run: ``PYTHONPATH=src python examples/cityscale_cache_sim.py [--nodes 100]
-[--scenario zipf] [--trace requests.npz]``
+[--scenario zipf] [--trace requests.npz] [--engine sharded]``
 
 Simulates a metropolitan sensor fleet (default 100 nodes, ~30 simulated
 minutes): every node logs one reading per second, shares it with the fog
@@ -17,6 +17,17 @@ node churn, Poisson write arrivals, or synthetic trace replay.  ``--trace``
 replays a recorded ``(T, N)`` request tensor instead: an ``.npz`` file with
 ``key_ids`` and ``ops`` (0=write, 1=read) arrays, e.g. one written by
 ``repro.core.workload.save_trace_npz``.
+
+``--engine`` picks the simulation engine (``run_any_engine``, DESIGN.md §8):
+the default ``reference`` keeps the tick-by-tick outage trace below; the
+other engines (``fused``, ``distributed``, ``sharded``) run the whole span
+in one scan with the outage on ``cfg.outage_schedule``.  The mesh engines
+shard over all visible XLA devices — force a count with
+``XLA_FLAGS=--xla_force_host_platform_device_count=K`` (K must divide
+``--nodes``).  ``sharded`` is the bandwidth-lean engine #4 (DESIGN.md §10):
+it needs a mutable zipf scenario (e.g. ``--scenario zipf``) and its
+``wire_bytes_per_tick`` line shows the on-wire traffic the consistent-hash
+routing saves versus ``distributed``.
 """
 import argparse
 import dataclasses
@@ -27,7 +38,7 @@ import numpy as np
 from repro.core import SCENARIOS, SimConfig, summarize
 from repro.core import backing_store as bs
 from repro.core import workload as wl
-from repro.core.simulator import init_sim, sim_tick
+from repro.core.simulator import init_sim, run_any_engine, sim_tick
 
 
 def _pick_workload(args, ticks: int) -> wl.WorkloadSpec:
@@ -66,6 +77,11 @@ def main() -> None:
     ap.add_argument("--trace", default=None, metavar="NPZ",
                     help="replay a recorded (T, N) trace: npz file with "
                          "'key_ids' and 'ops' arrays (overrides --scenario)")
+    ap.add_argument("--engine", default="reference",
+                    choices=("reference", "fused", "distributed", "sharded"),
+                    help="simulation engine (DESIGN.md §8); 'sharded' is the "
+                         "bandwidth-lean engine #4 and needs a mutable zipf "
+                         "scenario, e.g. --scenario zipf")
     args = ap.parse_args()
 
     ticks = args.minutes * 60
@@ -79,34 +95,50 @@ def main() -> None:
         workload=spec,
     )
     wl.validate_run(cfg, ticks)
-    state = init_sim(cfg)
-    step = jax.jit(lambda s: sim_tick(cfg, s))
 
-    series = []
-    for t in range(ticks):
-        if t == args.outage_at:
-            state = dataclasses.replace(
-                state, store=bs.inject_outage(state.store, t, args.outage_s)
-            )
-            print(f"[t={t:5d}] *** cloud outage injected ({args.outage_s}s) ***")
-        state, m = step(state)
-        series.append(m)
-        if t % 300 == 0 or (args.outage_at <= t < args.outage_at + args.outage_s + 60
-                            and t % 60 == 0):
-            print(
-                f"[t={t:5d}] queue={int(m.queue_depth):6d} "
-                f"missed_reads={int(m.misses):3d} "
-                f"wan_B/s={float(m.wan_tx_bytes + m.wan_rx_bytes):12.0f}"
-            )
+    if args.engine == "reference":
+        # Per-tick loop: keeps the live outage trace printed below.
+        state = init_sim(cfg)
+        step = jax.jit(lambda s: sim_tick(cfg, s))
 
-    stacked = jax.tree.map(lambda *xs: jax.numpy.stack(xs), *series)
+        series = []
+        for t in range(ticks):
+            if t == args.outage_at:
+                state = dataclasses.replace(
+                    state, store=bs.inject_outage(state.store, t, args.outage_s)
+                )
+                print(f"[t={t:5d}] *** cloud outage injected ({args.outage_s}s) ***")
+            state, m = step(state)
+            series.append(m)
+            if t % 300 == 0 or (args.outage_at <= t < args.outage_at + args.outage_s + 60
+                                and t % 60 == 0):
+                print(
+                    f"[t={t:5d}] queue={int(m.queue_depth):6d} "
+                    f"missed_reads={int(m.misses):3d} "
+                    f"wan_B/s={float(m.wan_tx_bytes + m.wan_rx_bytes):12.0f}"
+                )
+        stacked = jax.tree.map(lambda *xs: jax.numpy.stack(xs), *series)
+    else:
+        # Whole-span engines: the outage rides on cfg.outage_schedule.
+        cfg = dataclasses.replace(
+            cfg, outage_schedule=((args.outage_at, args.outage_s),)
+        )
+        if args.engine == "sharded" and not cfg.workload.mutable:
+            raise SystemExit(
+                f"--engine sharded needs a mutable zipf scenario, not "
+                f"'{args.scenario}': try --scenario zipf (or zipf_hot)"
+            )
+        print(f"[engine={args.engine}] running {ticks} ticks in one scan "
+              f"(outage at t={args.outage_at} for {args.outage_s}s)")
+        _, stacked = run_any_engine(cfg, ticks, engine=args.engine)
     s = summarize(stacked)
     what = f"trace '{args.trace}'" if args.trace else f"scenario '{args.scenario}'"
     print(f"\n=== {args.minutes}-minute city-scale run — {what} ===")
     keys = ["read_miss_ratio", "sync_store_request_ratio",
             "wan_reduction_vs_baseline", "wan_bytes_per_tick",
-            "lan_bytes_per_tick", "writes_gen", "writes_drained",
-            "final_queue_depth", "queue_dropped", "store_missing"]
+            "lan_bytes_per_tick", "wire_bytes_per_tick", "writes_gen",
+            "writes_drained", "final_queue_depth", "queue_dropped",
+            "store_missing"]
     if cfg.workload.mutable:
         keys += ["coherence_updates", "writes_coalesced", "stale_reads",
                  "stale_read_ratio", "churn_rejoins"]

@@ -56,7 +56,12 @@ from repro.core.cache_state import CacheLine, CacheState, empty_cache
 from repro.core.coherence import GilbertElliott
 from repro.core.flic import insert as _insert
 from repro.core.flic import invalidate_nodes, update_rows
-from repro.core.metrics import TickMetrics, windowed_scan
+from repro.core.metrics import (
+    TickMetrics,
+    allgather_bytes,
+    allreduce_bytes,
+    windowed_scan,
+)
 from repro.core.simulator import (
     SimConfig,
     _advance_channel,
@@ -393,6 +398,24 @@ def fog_shard_tick(
         n_writes.astype(jnp.float32) * cfg.row_bytes
         + n_reads.astype(jnp.float32) * cfg.store.read_txn_bytes(baseline_table_rows)
     )
+    # On-wire byte accounting (embodiment observable, excluded from the
+    # bit-identity contract): the parity tick's collective inventory is
+    # STATIC — every tensor above is dense regardless of live traffic —
+    # so its modeled ring cost is a compile-time constant per tick.
+    p_shards = n // n_local
+    wire = (
+        allgather_bytes(p_shards, n_local, 1)        # q_need broadcast (bool)
+        + allreduce_bytes(p_shards, n, 4)            # win_ts pmax (i32)
+        + allreduce_bytes(p_shards, n, 4)            # win_node pmax (i32)
+        + allreduce_bytes(p_shards, n * cfg.payload_dim, 4)  # win_data psum
+        + allreduce_bytes(p_shards, 1, 4)            # n_responses psum
+        + allreduce_bytes(p_shards, 1, 4)            # n_hits_local psum
+    )
+    if spec.mutable:
+        wire += (
+            allreduce_bytes(p_shards, 1, 4)          # n_coh psum
+            + allreduce_bytes(p_shards, 1, 4)        # n_stale psum
+        )
     metrics = dataclasses.replace(
         m,
         wan_tx_bytes=wan_tx,
@@ -416,6 +439,7 @@ def fog_shard_tick(
         stale_reads=n_stale,
         writes_coalesced=queue.coalesced - state.queue.coalesced,
         churn_rejoins=n_rejoin,
+        wire_bytes=jnp.float32(wire),
     )
     new_state = FogShardState(
         caches=caches, queue=queue, store=store, channel=channel,

@@ -37,6 +37,10 @@ class TickMetrics:
     stale_reads: jax.Array        # served reads older than the key's latest write
     writes_coalesced: jax.Array   # re-writes merged into a pending ring slot
     churn_rejoins: jax.Array      # nodes that rejoined (cold) this tick
+    # Embodiment observable (EXCLUDED from the bit-identity contract, §8):
+    wire_bytes: jax.Array         # modeled on-wire bytes of cross-shard
+    #                               collective traffic this tick (0 when the
+    #                               engine runs on one shard / one host)
 
     @staticmethod
     def zeros(ticks: int = 1) -> "TickMetrics":
@@ -53,12 +57,42 @@ class TickMetrics:
             hits_queue=i, ticks=jnp.int32(ticks),
             coherence_updates=i, stale_reads=i,
             writes_coalesced=i, churn_rejoins=i,
+            wire_bytes=f,
         )
 
 
 # Fields whose per-tick value is a level, not a flow: windowed aggregation
 # (``run_sim(..., metrics_every=k)``) keeps the LAST value instead of the sum.
 GAUGE_FIELDS = ("queue_depth", "queue_dropped")
+
+# Fields that measure the EMBODIMENT (mesh topology, shard count, collective
+# schedule) rather than the protocol.  They are excluded from the cross-engine
+# and cross-device-count bit-identity contract: the same tick semantics on a
+# different mesh legitimately moves a different number of bytes.
+EMBODIMENT_FIELDS = ("wire_bytes",)
+
+# Summary keys derived from embodiment fields (same exclusion applies).
+EMBODIMENT_SUMMARY_KEYS = ("wire_bytes_per_tick",)
+
+
+def allgather_bytes(p: int, n_elems: int, elem_bytes: int) -> float:
+    """Modeled wire cost of a ring all_gather over ``p`` shards.
+
+    Each shard contributes ``n_elems`` elements; a ring all-gather forwards
+    every shard's block through ``p - 1`` hops, so total traffic is
+    ``p * (p - 1) * n_elems * elem_bytes``.  Zero at ``p == 1``.
+    """
+    return float(p * (p - 1) * n_elems * elem_bytes)
+
+
+def allreduce_bytes(p: int, n_elems: int, elem_bytes: int) -> float:
+    """Modeled wire cost of a ring all_reduce (psum/pmax) over ``p`` shards.
+
+    ``n_elems`` is the FULL reduced tensor size.  Ring reduce-scatter +
+    all-gather each move ``(p - 1)/p`` of the tensor per shard, so total
+    traffic is ``2 * (p - 1) * n_elems * elem_bytes``.  Zero at ``p == 1``.
+    """
+    return float(2 * (p - 1) * n_elems * elem_bytes)
 
 
 def accumulate(agg: TickMetrics, m: TickMetrics) -> TickMetrics:
@@ -155,6 +189,9 @@ def summarize(series: TickMetrics) -> dict:
                 tot.hits_local + tot.hits_fog + tot.hits_queue + tot.store_found, 1
             )
         ),
+        # Embodiment observable (EMBODIMENT_SUMMARY_KEYS — excluded from the
+        # cross-engine bit-identity comparison): modeled cross-shard traffic.
+        "wire_bytes_per_tick": float(tot.wire_bytes / ticks),
     }
     return out
 

@@ -827,10 +827,13 @@ def run_any_engine(
 ):
     """Engine-agnostic dispatcher for the conformance contract (DESIGN.md §8).
 
-    ``engine`` is ``"reference"`` / ``"fused"`` (single-host ``run_sim``) or
-    ``"distributed"`` — the ``shard_map`` runtime on a 1-D mesh over ALL
-    visible devices (``cfg.n_nodes`` must divide the device count; force the
-    count with ``XLA_FLAGS=--xla_force_host_platform_device_count=K``).
+    ``engine`` is ``"reference"`` / ``"fused"`` (single-host ``run_sim``),
+    ``"distributed"`` — the bit-identical parity ``shard_map`` runtime — or
+    ``"sharded"`` — the bandwidth-lean engine #4 (consistent-hash routing,
+    per-shard PRNG, tolerance-tier conformance; DESIGN.md §10).  Both mesh
+    engines run on a 1-D mesh over ALL visible devices (``cfg.n_nodes``
+    must divide the device count; force the count with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=K``).
 
     Every engine returns ``(final_state, TickMetrics series)`` with the same
     series shape; ``tests/conformance.py`` asserts the series (and therefore
@@ -846,13 +849,22 @@ def run_any_engine(
             f"(including distributed): ticks ({ticks}) must be divisible by "
             f"metrics_every ({metrics_every})"
         )
-    if engine == "distributed":
-        from repro.core.distributed import run_distributed_sim
-
+    if engine in ("distributed", "sharded"):
         ndev = len(jax.devices())
         axis_type = getattr(jax.sharding, "AxisType", None)
         kw = dict(axis_types=(axis_type.Auto,)) if axis_type is not None else {}
         mesh = jax.make_mesh((ndev,), (axis,), **kw)
+        if engine == "sharded":
+            # Engine #4 (DESIGN.md §10): bandwidth-lean, tolerance-tier
+            # conformance instead of bit-identity.
+            from repro.core.sharded import run_sharded_sim
+
+            return run_sharded_sim(
+                mesh, cfg, ticks, axis=axis, seed=seed,
+                metrics_every=metrics_every,
+            )
+        from repro.core.distributed import run_distributed_sim
+
         return run_distributed_sim(
             mesh, cfg, ticks, axis=axis, seed=seed, metrics_every=metrics_every
         )

@@ -514,6 +514,114 @@ def save_trace_npz(path: str, key_ids: np.ndarray, ops: np.ndarray) -> None:
 
 
 # --------------------------------------------------------------------------
+# Consistent-hash key→node routing (the sharded engine, DESIGN.md §10).
+#
+# Same construction discipline as ``neighbor_table``: host-side numpy,
+# deterministic in its arguments, consumed as a jit-time constant — routing
+# never costs a collective.  Virtual nodes smooth per-node load; the
+# precomputed candidate table makes churn rebalancing a pure function of
+# (key, tick): each key's home is its first ONLINE candidate along the ring,
+# so when a node leaves/rejoins only the keys whose first-online candidate
+# changed remap (no global reshuffle), and every shard agrees with zero
+# communication because ``online_mask`` is deterministic in t.
+# --------------------------------------------------------------------------
+
+# Salt separating ring-position hashing from the cache-line key hash domain.
+RING_SALT = 0x0C0F5A1E
+RING_VNODES = 16   # virtual positions per node on the ring
+RING_DEPTH = 4     # precomputed fallback owners per key
+
+
+def _splitmix32_np(x: np.ndarray) -> np.ndarray:
+    """Host-numpy mirror of ``repro.utils.hashing.splitmix32`` (same bits)."""
+    x = np.asarray(x, np.uint32)
+    x = (x + np.uint32(0x9E3779B9)).astype(np.uint32)
+    x = ((x ^ (x >> np.uint32(16))) * np.uint32(0x85EBCA6B)).astype(np.uint32)
+    x = ((x ^ (x >> np.uint32(13))) * np.uint32(0xC2B2AE35)).astype(np.uint32)
+    return (x ^ (x >> np.uint32(16))).astype(np.uint32)
+
+
+def _hash2_np(a, b) -> np.ndarray:
+    """Host-numpy mirror of ``repro.utils.hashing.hash2_u32`` (same bits)."""
+    a = np.asarray(a, np.uint32)
+    b = np.asarray(b, np.uint32)
+    mix = (b + np.uint32(0x9E3779B9)
+           + (a << np.uint32(6)) + (a >> np.uint32(2))).astype(np.uint32)
+    return _splitmix32_np(_splitmix32_np(a) ^ mix)
+
+
+@functools.lru_cache(maxsize=32)
+def hash_ring(n: int, vnodes: int = RING_VNODES) -> tuple[np.ndarray, np.ndarray]:
+    """The sorted virtual-node ring of an N-node fog.
+
+    Returns ``(positions, owners)`` — ``n * vnodes`` uint32 ring positions in
+    ascending order and the owning node id of each.
+    """
+    if n < 1 or vnodes < 1:
+        raise ValueError(f"hash_ring needs n >= 1, vnodes >= 1 (got {n}, {vnodes})")
+    node = np.repeat(np.arange(n, dtype=np.uint32), vnodes)
+    vidx = np.tile(np.arange(vnodes, dtype=np.uint32), n)
+    pos = _hash2_np(_hash2_np(node, vidx), np.uint32(RING_SALT))
+    order = np.argsort(pos, kind="stable")
+    return pos[order], node[order].astype(np.int32)
+
+
+@functools.lru_cache(maxsize=32)
+def ring_candidates(
+    n: int, key_universe: int,
+    vnodes: int = RING_VNODES, depth: int = RING_DEPTH,
+) -> np.ndarray:
+    """Per-key owner candidates: ``(K, L)`` first L DISTINCT nodes clockwise.
+
+    Row k lists, in ring order starting from key k's hashed position, the
+    first ``L = min(depth, n)`` distinct node ids encountered — the key's
+    home and its failover order.  A jit-time constant (``key_universe`` is
+    bounded on every routed workload), shared bitwise by all shards.
+    """
+    depth = min(depth, n)
+    pos, owner = hash_ring(n, vnodes)
+    v = pos.shape[0]
+    kpos = _hash2_np(np.arange(key_universe, dtype=np.uint32),
+                     np.uint32(RING_SALT))
+    start = np.searchsorted(pos, kpos, side="left") % v
+    cand = np.full((key_universe, depth), -1, np.int64)
+    count = np.zeros(key_universe, np.int64)
+    for j in range(v):
+        o = owner[(start + j) % v].astype(np.int64)
+        fresh = (cand != o[:, None]).all(axis=1) & (count < depth)
+        rows = np.nonzero(fresh)[0]
+        cand[rows, count[rows]] = o[rows]
+        count[rows] += 1
+        if count.min() >= depth:
+            break
+    assert (cand >= 0).all(), "ring walk must reach depth distinct owners"
+    return cand.astype(np.int32)
+
+
+def route_keys(
+    spec: WorkloadSpec, n: int, t: jax.Array, key_ids: jax.Array,
+    vnodes: int = RING_VNODES, depth: int = RING_DEPTH,
+) -> jax.Array:
+    """Home NODE id of each key id at tick ``t`` (deterministic, global).
+
+    The home is the key's first ONLINE ring candidate (``ring_candidates``
+    order); if every candidate is offline the first online node overall
+    hosts it (deterministic catch-all).  Pure in (spec, n, t, key_ids):
+    every shard computes identical routes with no communication, and a churn
+    epoch remaps exactly the keys whose first-online candidate changed.
+    """
+    cand = jnp.asarray(ring_candidates(n, spec.key_universe, vnodes, depth))
+    kid = jnp.clip(jnp.asarray(key_ids, jnp.int32), 0, spec.key_universe - 1)
+    c = cand[kid]                                   # (..., L)
+    online = online_mask(spec, n, t)                # (n,)
+    ok = online[c]
+    pick = jnp.argmax(ok, axis=-1)
+    home = jnp.take_along_axis(c, pick[..., None], axis=-1)[..., 0]
+    fallback = jnp.argmax(online).astype(jnp.int32)
+    return jnp.where(jnp.any(ok, axis=-1), home, fallback)
+
+
+# --------------------------------------------------------------------------
 # Deterministic node-activity masks: rate modulation + churn.
 # --------------------------------------------------------------------------
 

@@ -106,6 +106,53 @@ def test_outage_during_churn_forwards_from_ring(forced_devices_run):
 
 
 @pytest.mark.slow
+def test_sharded_engine_halves_wire_bytes(forced_devices_run):
+    """The bandwidth-lean engine's headline gate (ISSUE, echoing the paper's
+    >50% traffic claim): at 4 shards the sharded engine moves >=50% fewer
+    modeled on-wire bytes/tick than the parity engine on the same mutable
+    zipf workload, while staying within the tolerance-tier miss envelope and
+    conserving writes globally across its per-shard rings."""
+    out = forced_devices_run("""
+        import jax, json
+        import numpy as np
+        from jax.sharding import Mesh
+        from repro.core import SimConfig, summarize
+        from repro.core.workload import SCENARIOS
+        from repro.core.distributed import run_distributed_sim
+        from repro.core.sharded import run_sharded_sim
+        cfg = SimConfig(n_nodes=48, cache_lines=200, loss_prob=0.01,
+                        workload=SCENARIOS['zipf_hot'])
+        rec = {}
+        for ndev in (4, 8):
+            mesh = Mesh(np.asarray(jax.devices()[:ndev]), ('data',))
+            _, par = run_distributed_sim(mesh, cfg, 300, axis='data')
+            _, shd = run_sharded_sim(mesh, cfg, 300, axis='data')
+            ps, ss = summarize(par), summarize(shd)
+            rec[ndev] = dict(
+                parity_wire=ps['wire_bytes_per_tick'],
+                sharded_wire=ss['wire_bytes_per_tick'],
+                parity_miss=ps['read_miss_ratio'],
+                sharded_miss=ss['read_miss_ratio'],
+                gen=ss['writes_gen'],
+                budget=(ss['writes_drained'] + ss['final_queue_depth']
+                        + ss['queue_dropped'] + ss['writes_coalesced']),
+                reads_equal=ss['reads'] == ps['reads'],
+            )
+        print('WIRE=' + json.dumps(rec))
+    """)
+    line = [l for l in out.strip().splitlines() if l.startswith("WIRE=")][-1]
+    rec = json.loads(line[len("WIRE="):])
+    for ndev, r in rec.items():
+        assert r["parity_wire"] > 0 and r["sharded_wire"] > 0, (ndev, r)
+        # the ISSUE's acceptance gate: >=50% fewer bytes/tick at 4+ shards
+        assert r["sharded_wire"] <= 0.5 * r["parity_wire"], (ndev, r)
+        # fidelity rides along: tolerance-tier miss envelope + conservation
+        assert abs(r["sharded_miss"] - r["parity_miss"]) <= 0.12, (ndev, r)
+        assert r["gen"] == r["budget"], (ndev, r)
+        assert r["reads_equal"], (ndev, r)
+
+
+@pytest.mark.slow
 def test_mini_dryrun_lowers_and_compiles(forced_devices_run):
     """build_cell lowers+compiles on a (2,4) mesh for a full-size config."""
     out = forced_devices_run("""

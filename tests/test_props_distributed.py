@@ -9,8 +9,9 @@ host devices, so every count shares the process and its jit cache):
   dropped`` with ``appended == drained + pending`` exactly
   (``writeback.ring_accounting``);
 * **psum-invariance of TickMetrics** — the psum-reduced global metrics are
-  the sum of per-shard partials by construction, so the ENTIRE series must
-  be bit-identical for any device count: resharding the fog cannot change
+  the sum of per-shard partials by construction, so the series (minus the
+  ``metrics.EMBODIMENT_FIELDS``, which measure the mesh itself) must be
+  bit-identical for any device count: resharding the fog cannot change
   what the fog computes.
 
 Parameters are drawn from small pools (recompiles are bounded by the pool
@@ -31,6 +32,7 @@ CODE = """
     from repro.core.simulator import SimConfig
     from repro.core.workload import WorkloadSpec
     from repro.core.distributed import run_distributed_sim
+    from repro.core.metrics import EMBODIMENT_FIELDS
     from repro.core.writeback import ring_accounting
 
     spec = WorkloadSpec(popularity='zipf', key_universe=256,
@@ -49,8 +51,11 @@ CODE = """
                        + ring['dropped']), (ndev, gen, ring)
         assert ring['appended'] == drained + ring['pending'], (ndev, ring)
         # (2) psum-invariance: the full series is independent of sharding
+        # (wire_bytes etc. measure the embodiment itself and DO depend on
+        # the device count — excluded, like in the conformance contract)
         fields = {{f: np.asarray(getattr(series, f)).tolist()
-                   for f in series.__dataclass_fields__}}
+                   for f in series.__dataclass_fields__
+                   if f not in EMBODIMENT_FIELDS}}
         if base is None:
             base = fields
         else:
